@@ -1,0 +1,104 @@
+"""Shared benchmark utilities: timing, data, work counters, reporting."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core.blocknl import JoinStats, knn_join
+from repro.core.reference import HostCSR, reference_join
+from repro.sparse.datagen import spectra_like, synthetic_sparse
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+
+def to_host(sb) -> HostCSR:
+    return HostCSR.from_padded(sb.indices, sb.values, sb.nnz, sb.dim)
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def run_host_join(R, S, k, algorithm, r_block=None, s_block=None):
+    Rh, Sh = to_host(R), to_host(S)
+    (sc, ids), dt = timed(
+        reference_join, Rh, Sh, k, algorithm=algorithm,
+        r_block=r_block, s_block=s_block,
+    )
+    return {"cpu_s": round(dt, 4)}
+
+
+def run_jax_join(R, S, k, algorithm, r_block=None, s_block=None):
+    stats = JoinStats()
+    # warm compile, then measure
+    knn_join(R, S, k, algorithm=algorithm, r_block=r_block, s_block=s_block)
+    st, dt = timed(
+        knn_join, R, S, k, algorithm=algorithm,
+        r_block=r_block, s_block=s_block, stats=stats,
+    )
+    return {
+        "wall_s": round(dt, 4),
+        "tiles_scored": stats.tiles_scored,
+        "list_entries": stats.list_entries,
+        "rescued_columns": stats.rescued_columns,
+        "dense_pairs": stats.dense_pairs,
+    }
+
+
+def work_counters(R, S, k, r_block, s_block) -> Dict[str, Dict]:
+    """Machine-independent cost-model counters (paper C2 vs C3)."""
+    out = {}
+    for algorithm in ("bf", "iib", "iiib"):
+        stats = JoinStats()
+        knn_join(R, S, k, algorithm=algorithm, r_block=r_block, s_block=s_block,
+                 stats=stats)
+        out[algorithm] = {
+            "tiles_scored": stats.tiles_scored,
+            "list_entries": stats.list_entries,
+            "rescued_columns": stats.rescued_columns,
+            "dense_pairs": stats.dense_pairs,
+        }
+    return out
+
+
+def _jsonable(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, (np.bool_,)):
+        return bool(o)
+    raise TypeError(f"not serializable: {type(o)}")
+
+
+def save_result(name: str, payload) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=_jsonable)
+    return path
+
+
+def table(rows: List[Dict], cols: List[str]) -> str:
+    widths = [max(len(c), *(len(str(r.get(c, ""))) for r in rows)) for c in cols]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(cols, widths))]
+    lines.append("  ".join("-" * w for w in widths))
+    for r in rows:
+        lines.append("  ".join(str(r.get(c, "")).ljust(w) for c, w in zip(cols, widths)))
+    return "\n".join(lines)
+
+
+def gen(kind: str, n: int, seed: int, dim: int = 10_000, nnz: int = 120):
+    if kind == "spectra":
+        return spectra_like(n, dim=max(dim, 2000), peaks_mean=max(nnz // 2, 10), seed=seed)
+    return synthetic_sparse(n, dim=dim, nnz_mean=nnz, seed=seed)

@@ -1,0 +1,42 @@
+"""Paper Fig. 2 — effect of relative size R:S (fixed |R|, growing |S|).
+
+Paper: |R| = 10,000 fixed, |S| from 1,000 to 100,000 (R:S from 10:1 to
+1:10); claim: cost grows in proportion to |S| and is not hurt by
+asymmetry; IIIB stays the fastest.  Scaled: |R| = 1,000, |S| up to 8,000.
+"""
+from __future__ import annotations
+
+from benchmarks.common import gen, run_host_join, save_result, table
+
+NR = 1000
+NS = (250, 1000, 4000, 8000)
+DIM = 10_000
+K = 5
+
+
+def run(fast: bool = False):
+    ns_list = NS[:2] if fast else NS
+    R = gen("synthetic", NR, seed=1, dim=DIM)
+    rows = []
+    for ns in ns_list:
+        S = gen("synthetic", ns, seed=2, dim=DIM)
+        rb, sb = 512, max(min(ns // 2, 2048), 128)
+        row = {"ns": ns, "ratio": f"{NR}:{ns}"}
+        for algorithm in ("bf", "iib", "iiib"):
+            host = run_host_join(R, S, K, algorithm, r_block=rb, s_block=sb)
+            row[f"{algorithm}_cpu_s"] = host["cpu_s"]
+        rows.append(row)
+        print(table([row], list(row)), flush=True)
+
+    # claim: cost ∝ |S| (ratio of costs ~ ratio of sizes, within 2x slack)
+    grow = rows[-1]["iiib_cpu_s"] / max(rows[0]["iiib_cpu_s"], 1e-9)
+    size_grow = ns_list[-1] / ns_list[0]
+    checks = {
+        "iiib_fastest_at_max": rows[-1]["iiib_cpu_s"] <= rows[-1]["bf_cpu_s"],
+        "cost_growth": round(grow, 2),
+        "size_growth": size_grow,
+        "roughly_proportional": grow < 2.5 * size_grow,
+    }
+    out = {"rows": rows, "checks": checks}
+    save_result("fig2_relative_size", out)
+    return out

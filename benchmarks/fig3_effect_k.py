@@ -1,0 +1,67 @@
+"""Paper Fig. 3 — effect of k (real MS/MS-like data).
+
+Paper: Yeast (35k) ⋈ Worm (208k) spectra, k in {5, 10, 15, 20}; claims:
+(a) CPU cost rises only moderately with k (pruning doesn't depend on k);
+(b) IIIB ≈ 16% better than IIB on Yeast&Worm — measured here on the
+    cost-model counters (IIIB indexes/scans fewer features than IIB);
+(c) IIB/IIIB >> BF, whose work C2 touches every feature of every s.
+Scaled: spectra-like generators (same heavy-tailed intensity profile),
+|R| = 800, |S| = 3200.
+"""
+from __future__ import annotations
+
+from benchmarks.common import gen, save_result, table, timed, to_host
+from repro.core.reference import WorkCounters, reference_join
+
+KS = (5, 10, 15, 20)
+NR, NS = 800, 3200
+
+
+def run(fast: bool = False):
+    ks = KS[:2] if fast else KS
+    R = gen("spectra", NR, seed=11)
+    S = gen("spectra", NS, seed=12)
+    Rh, Sh = to_host(R), to_host(S)
+    rows = []
+    for k in ks:
+        row = {"k": k}
+        for algorithm in ("bf", "iib", "iiib"):
+            work = WorkCounters()
+            _, dt = timed(reference_join, Rh, Sh, k, algorithm=algorithm,
+                          r_block=400, s_block=400, work=work)
+            row[f"{algorithm}_cpu_s"] = round(dt, 3)
+            row[f"{algorithm}_touches"] = work.total()
+        # decomposition: IIIB trades scan/build work for rescue work; the
+        # NET sign depends on the operating point (see EXPERIMENTS.md §Fig3)
+        wiii = WorkCounters()
+        reference_join(Rh, Sh, k, algorithm="iiib", r_block=400, s_block=400,
+                       work=wiii)
+        row["iiib_scan_saved_pct"] = round(
+            100 * (1 - (wiii.scan_touches + wiii.build_touches)
+                   / max(row["iib_touches"], 1)), 1
+        )
+        row["iiib_rescue_touches"] = wiii.rescue_touches
+        rows.append(row)
+        print(table([row], list(row)), flush=True)
+
+    k_growth = rows[-1]["iiib_cpu_s"] / max(rows[0]["iiib_cpu_s"], 1e-9)
+    checks = {
+        # (a) moderate growth in k: x4 k -> well under x2 cost
+        "k_insensitive": k_growth < 2.0,
+        "k_cost_growth": round(k_growth, 2),
+        # (b) IIIB's index scan/build shrinks vs IIB (the paper's savings
+        #     source); NET gain at the paper's 35k x 208k scale ≈ +16%,
+        #     negative at container scale (rescue ∝ candidate-pair count —
+        #     mechanism analysis in EXPERIMENTS.md)
+        "iiib_scan_saved_pct": rows[0]["iiib_scan_saved_pct"],
+        "iiib_net_gain_pct": round(
+            100 * (1 - rows[0]["iiib_touches"] / max(rows[0]["iib_touches"], 1)), 1
+        ),
+        # (c) work reduction vs BF (the paper's ~10x wall-time source)
+        "work_ratio_over_bf": round(
+            rows[0]["bf_touches"] / max(rows[0]["iib_touches"], 1), 2
+        ),
+    }
+    out = {"rows": rows, "checks": checks}
+    save_result("fig3_effect_k", out)
+    return out

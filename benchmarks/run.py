@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper figure + the roofline table.
+
+  PYTHONPATH=src python -m benchmarks.run            # full
+  PYTHONPATH=src python -m benchmarks.run --fast     # CI-sized
+  PYTHONPATH=src python -m benchmarks.run --only fig3_effect_k
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks import fig1_data_size, fig2_relative_size, fig3_effect_k, fig4_buffer_size, roofline
+
+SUITES = {
+    "fig1_data_size": fig1_data_size.run,
+    "fig2_relative_size": fig2_relative_size.run,
+    "fig3_effect_k": fig3_effect_k.run,
+    "fig4_buffer_size": fig4_buffer_size.run,
+    "roofline": roofline.run,
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args(argv)
+
+    names = [args.only] if args.only else list(SUITES)
+    summary = {}
+    for name in names:
+        print(f"\n######## {name} ########", flush=True)
+        t0 = time.time()
+        out = SUITES[name](fast=args.fast)
+        summary[name] = {
+            "seconds": round(time.time() - t0, 1),
+            "checks": out.get("checks") if isinstance(out, dict) else None,
+        }
+    print("\n######## summary ########")
+    print(json.dumps(summary, indent=1, default=str))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,131 @@
+"""Hillclimb driver: lower one cell with config/StepOptions overrides and
+print the three roofline terms + top-traffic ops.
+
+  PYTHONPATH=src python experiments/hillclimb.py --arch rwkv6-3b \
+      --shape train_4k --set rwkv_chunk=128 --opt ce_chunk=512 --tag chunk128
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs.base import get_config
+from repro.launch import shapes as SH
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (
+    batch_shardings, cache_shardings, opt_shardings, param_shardings,
+)
+from repro.launch.steps import (
+    StepOptions, abstract_train_state, make_decode_step, make_prefill_step,
+    make_train_step,
+)
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def parse_kv(items):
+    out = {}
+    for it in items or []:
+        k, v = it.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = {"true": True, "false": False}.get(v.lower(), v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--set", nargs="*", help="config overrides k=v")
+    ap.add_argument("--opt", nargs="*", help="StepOptions overrides k=v")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="probe")
+    ap.add_argument("--top", type=int, default=10)
+    ap.add_argument("--dump-hlo", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    cfg = dataclasses.replace(cfg, **parse_kv(args.set))
+    opts = StepOptions(**parse_kv(args.opt))
+    shape = SH.SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    n_chips = 512 if args.multi_pod else 256
+
+    params_abs, opt_abs = abstract_train_state(cfg)
+    p_sh = param_shardings(params_abs, mesh, opts.sharding_mode)
+    o_sh = opt_shardings(opt_abs, p_sh, mesh)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            batch_abs = SH.train_input_specs(cfg, shape)
+            b_sh = batch_shardings(batch_abs, mesh, opts.sharding_mode)
+            step = make_train_step(cfg, mesh, opts)
+            compiled = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                               out_shardings=(p_sh, o_sh, None),
+                               donate_argnums=(0, 1)).lower(
+                params_abs, opt_abs, batch_abs).compile()
+        elif shape.kind == "prefill":
+            batch_abs = SH.prefill_input_specs(cfg, shape)
+            cache_abs = SH.abstract_cache(cfg, shape)
+            b_sh = batch_shardings(batch_abs, mesh, opts.sharding_mode)
+            c_sh = cache_shardings(cache_abs, mesh, shape.global_batch)
+            step = make_prefill_step(cfg, mesh, opts)
+            compiled = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                               out_shardings=(None, c_sh),
+                               donate_argnums=(2,)).lower(
+                params_abs, batch_abs, cache_abs).compile()
+        else:
+            specs = SH.decode_input_specs(cfg, shape)
+            c_sh = cache_shardings(specs["cache"], mesh, shape.global_batch)
+            t_sh = batch_shardings(specs["token"], mesh, opts.sharding_mode)
+            step = make_decode_step(cfg, mesh, opts)
+            compiled = jax.jit(step, in_shardings=(p_sh, t_sh, c_sh, None),
+                               out_shardings=(None, c_sh),
+                               donate_argnums=(2,)).lower(
+                params_abs, specs["token"], specs["cache"], specs["pos"]).compile()
+    compile_s = time.time() - t0
+
+    txt = compiled.as_text()
+    if args.dump_hlo:
+        open(args.dump_hlo, "w").write(txt)
+    top = []
+    a = analyze(txt, n_chips, top=top)
+    mem = compiled.memory_analysis()
+    terms = {
+        "compute_s": a.flops / PEAK,
+        "memory_s": a.hbm_bytes / HBM,
+        "collective_s": a.total_collective_bytes() / LINK,
+    }
+    dom = max(terms, key=terms.get)
+    print(f"\n=== {args.arch} {args.shape} [{args.tag}] compile {compile_s:.1f}s ===")
+    print(f"compute {terms['compute_s']:.3f}s | memory {terms['memory_s']:.3f}s | "
+          f"collective {terms['collective_s']:.3f}s  -> dominant: {dom}")
+    print(f"temp {mem.temp_size_in_bytes/2**30:.2f} GiB | args {mem.argument_size_in_bytes/2**30:.2f} GiB")
+    print(f"coll by group: " + json.dumps({str(k): round(v/2**30, 2) for k, v in sorted(a.collective_by_group.items())}))
+    print("top traffic:")
+    for b, f, code, name, mult in top[:args.top]:
+        print(f"  {b/2**30:9.2f} GiB x{mult:<7.0f} {code:16s} {name[-80:]}")
+    rec = {"arch": args.arch, "shape": args.shape, "tag": args.tag,
+           "overrides": {"cfg": parse_kv(args.set), "opt": parse_kv(args.opt)},
+           **{k: round(v, 4) for k, v in terms.items()},
+           "dominant": dom,
+           "temp_gib": round(mem.temp_size_in_bytes / 2**30, 2),
+           "flops_per_chip": a.flops, "hbm_per_chip": a.hbm_bytes,
+           "coll_per_chip": a.total_collective_bytes(), "compile_s": round(compile_s, 1)}
+    os.makedirs("experiments/perf", exist_ok=True)
+    with open(f"experiments/perf/{args.arch}_{args.shape}_{args.tag}.json", "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Architecture configs — one module per assigned architecture (+ the paper's own join config)."""
+from repro.configs.base import ModelConfig, REGISTRY, get_config, register, all_arch_names
+
+__all__ = ["ModelConfig", "REGISTRY", "get_config", "register", "all_arch_names"]

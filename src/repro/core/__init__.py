@@ -1,0 +1,21 @@
+"""The paper's contribution: KNN join for high-dimensional sparse data.
+
+Public API:
+  knn_join            — block nested-loop join (bf | iib | iiib), host-driven
+  reference_join      — literal paper algorithms (numpy), ground truth
+  ring_knn_join       — multi-device distributed join (shard_map ring)
+  TopKState           — streaming top-k candidate state
+  SparseBatch         — padded-CSR sparse vector batch (repro.sparse)
+"""
+from repro.core.blocknl import JoinStats, knn_join
+from repro.core.topk import TopKState, init_topk, min_prune_score, prune_scores, topk_update
+
+__all__ = [
+    "knn_join",
+    "JoinStats",
+    "TopKState",
+    "init_topk",
+    "topk_update",
+    "prune_scores",
+    "min_prune_score",
+]

@@ -1,0 +1,186 @@
+"""Improved inverted-index-based (IIIB) KNN join — paper Algorithm 4, TPU-adapted.
+
+Two exact variants:
+
+* **host-orchestrated** (`rescue` + driver in blocknl.py) — per-row UB
+  crossing (faithful to the paper's per-feature threshold walk), with the
+  candidate completion pass (paper lines 20-21) realized as a *dense rescue*:
+  candidate S rows are gathered into a compact block and re-scored exactly
+  on the MXU.  Candidate filter:  s must satisfy  A[r,s] > 0  (shared
+  indexed feature — Theorem 1)  AND  A[r,s] + prefUB(s) > pruneScore(r)
+  (a beyond-paper tightening: prefUB(s) bounds everything the index missed,
+  so anything below r's own prune score can be dropped before the rescue).
+
+* **uniform-crossing jit variant** (`iiib_join_block_uniform`) — fully
+  jit-able (used inside the distributed ring join where host round-trips
+  are unavailable): the crossing tile is flattened to the block-min c_min;
+  tiles < c_min are scored densely for all rows (bounded BF over the
+  prefix), tiles ≥ c_min via the pruned lists.  Exact by construction
+  (every (r, s) dot is fully covered by prefix + indexed suffix).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bf import bf_block_scores
+from repro.core.index import TileIndex, dense_r_tiles, tile_scores
+from repro.core.topk import TopKState, prune_scores, topk_update
+from repro.sparse.format import (
+    SparseBatch,
+    dim_frequency,
+    frequency_permutation,
+    max_weight_per_dim,
+)
+
+
+def prepare_r_block(r_block: SparseBatch, tile: int):
+    """Per-R-block precomputation for IIIB: frequency rank, maxWeight_d, dense tiles.
+
+    rank[d] = position of dim d in descending-frequency order (paper line 6);
+    maxw[d] = maxWeight_d(B_r) in ORIGINAL dim space (paper line 7).
+    """
+    freq = dim_frequency(r_block)
+    rank, _ = frequency_permutation(freq)
+    maxw = max_weight_per_dim(r_block)
+    r_tiles = dense_r_tiles(r_block, rank, tile)
+    return rank, maxw, r_tiles
+
+
+@jax.jit
+def indexed_scores_block(
+    state: TopKState,
+    r_tiles: jax.Array,
+    index: TileIndex,
+    active_tiles: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Phase 1: accumulate indexed-feature scores; return (A, pruneScores)."""
+    scores = tile_scores(r_tiles, index, active_tiles)
+    return scores, prune_scores(state)
+
+
+@partial(jax.jit, static_argnames=("num_cand",))
+def rescue(
+    state: TopKState,
+    r_block: SparseBatch,
+    s_block: SparseBatch,
+    cand: jax.Array,          # (C,) int32 block-local candidate rows; sentinel = num_s
+    s_offset: jax.Array,
+    num_cand: int,
+) -> TopKState:
+    """Phase 2 (paper lines 20-24): exact completion for candidate rows.
+
+    Full-dot recompute of the gathered candidate block — exact independent of
+    which features were indexed, MXU-friendly, cost ∝ |C|.
+    """
+    del num_cand  # static shape carried by `cand`
+    n_s = s_block.num_vectors
+    safe = jnp.minimum(cand, n_s - 1)
+    cand_block = SparseBatch(
+        indices=s_block.indices[safe],
+        values=s_block.values[safe],
+        nnz=s_block.nnz[safe],
+        dim=s_block.dim,
+    )
+    scores = bf_block_scores(r_block, cand_block)          # (|Br|, C)
+    valid = cand < n_s
+    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    ids = jnp.where(valid, s_offset + cand, -1)
+    return topk_update(state, scores, ids)
+
+
+def candidate_columns(
+    scores: np.ndarray,       # (|Br|, |Bs|) indexed-feature scores (host)
+    pref_ub: np.ndarray,      # (|Bs|,)
+    prune: np.ndarray,        # (|Br|,)
+    bucket: int = 128,
+) -> np.ndarray:
+    """Host-side candidate selection. Returns sentinel-padded block-local ids.
+
+    Exactness: s can enter some r's KNN only if dot(r,s) > pruneScore(r);
+    dot(r,s) ≤ A[r,s] + prefUB(s), and Theorem 1 gives A[r,s] > 0 for any
+    true candidate.  Rows with prefUB == 0 are fully indexed — their exact
+    score is already A, no rescue needed.
+    """
+    possible = (scores > 0.0) & ((scores + pref_ub[None, :]) > prune[:, None])
+    cols = np.nonzero(possible.any(axis=0) & (pref_ub > 0.0))[0]
+    n_s = scores.shape[1]
+    pad = -(-max(len(cols), 1) // bucket) * bucket
+    out = np.full(min(pad, ((n_s + bucket - 1) // bucket) * bucket), n_s, dtype=np.int32)
+    out[: len(cols)] = cols
+    return out
+
+
+@jax.jit
+def offer_fully_indexed(
+    state: TopKState,
+    scores: jax.Array,        # (|Br|, |Bs|) indexed scores
+    pref_ub: jax.Array,       # (|Bs|,)
+    s_offset: jax.Array,
+    s_valid: jax.Array,
+) -> TopKState:
+    """Merge rows with NO unindexed prefix (their A is already exact)."""
+    exact = (pref_ub == 0.0) & s_valid
+    ids = s_offset + jnp.arange(scores.shape[1], dtype=jnp.int32)
+    masked = jnp.where(exact[None, :] & (scores > 0.0), scores, -jnp.inf)
+    return topk_update(state, masked, ids)
+
+
+# ---------------------------------------------------------------------------
+# fully-jit variant (uniform crossing) — used by the distributed ring join
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("tile",))
+def iiib_join_block_uniform(
+    state: TopKState,
+    r_block: SparseBatch,
+    r_tiles: jax.Array,       # (T, |Br|, tile) permuted dense R tiles
+    rank: jax.Array,
+    index: TileIndex,
+    s_block: SparseBatch,     # needed for the dense prefix pass
+    s_offset: jax.Array,
+    s_valid: jax.Array,
+    tile: int,
+) -> TopKState:
+    """Exact jit-able IIIB step with block-uniform crossing tile.
+
+    prefix tiles [0, c_min):  dense matmul for ALL rows (no lists needed);
+    suffix tiles [c_min, T): via the pruned tile lists.
+    The caller builds `index` with per-row crossings; flattening to c_min is
+    done here by *also* scoring tiles in [c_min, min crossing of each row)
+    densely — covered because indexed lists start at each row's own
+    crossing, so dense prefix up to c_min + lists ≥ own crossing double-counts
+    nothing only if lists start ≥ c_min, which per-row crossing guarantees
+    (crossing(s) ≥ c_min).  Rows' features in [c_min, crossing(s)) are NOT
+    in the lists and NOT in the dense prefix — so instead the caller must
+    build this index with `uniform=True` semantics: crossing(s) := c_min for
+    all s.  See ``build_uniform_index`` in ring.py.
+    """
+    t_total = r_tiles.shape[0]
+    n_s = s_block.num_vectors
+
+    # dense prefix: tiles < c_min (c_min encoded in index.crossing, uniform)
+    c_min = index.crossing[0]
+    s_tiles = dense_r_tiles(s_block, rank, tile)           # (T, |Bs|, tile)
+
+    def prefix_body(acc, t):
+        p = jax.lax.dot_general(
+            r_tiles[t], s_tiles[t], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return acc + jnp.where(t < c_min, p, 0.0), None
+
+    acc0 = jnp.zeros((r_tiles.shape[1], n_s), jnp.float32)
+    prefix, _ = jax.lax.scan(prefix_body, acc0, jnp.arange(t_total))
+
+    # indexed suffix via lists (all tiles; lists are empty below crossing)
+    suffix = tile_scores(r_tiles, index, jnp.arange(t_total, dtype=jnp.int32))
+
+    scores = prefix + suffix
+    ids = s_offset + jnp.arange(n_s, dtype=jnp.int32)
+    scores = jnp.where(s_valid[None, :], scores, -jnp.inf)
+    return topk_update(state, scores, ids)

@@ -1,0 +1,290 @@
+"""Tile-granular inverted index — the TPU-native form of the paper's I_d lists.
+
+On TPU, a per-dimension inverted list (pointer-chasing) has no efficient
+analogue.  We lift the index to *dim-tile* granularity: the dimension axis
+is cut into ``tile``-wide groups (lane-width multiples); for each tile the
+index stores the list of S rows with any (indexed) mass in that tile,
+together with a densified ``(row, tile)`` value patch.  Scoring a tile is
+then one MXU matmul ``(|Br|, tile) @ (tile, M)`` plus a column scatter-add
+into the accumulator — work proportional to the *list length* ``M``, not
+|Bs|, exactly the paper's C3 structure.
+
+The same builder implements IIIB's threshold refinement (§4.4): features
+are walked in descending frequency(B_r) order accumulating the trivial
+upper bound ``t += maxWeight_d(B_r)·s[d]``; a row's features are indexed
+only from the tile containing the first crossing feature onward.  The
+unindexed prefix then provably satisfies ``dot(r, prefix) ≤ MinPruneScore``
+for every r (tile-granular Theorem 1 — our unindexed set is a subset of
+the paper's unindexed prefix, so its upper bound can only be smaller).
+
+Everything here is jit-able given a static ``max_rows`` bound; the host
+driver (blocknl) computes a concrete bound per block with numpy first.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.format import SparseBatch, num_tiles
+
+DEFAULT_TILE = 128
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class TileIndex:
+    """Inverted index at dim-tile granularity over one S block (permuted dims).
+
+    Arrays carry one extra sentinel tile (id = n_tiles) with empty lists so a
+    padded active-tile list can point at it harmlessly.
+    """
+
+    rows: jax.Array      # (T+1, M) int32 — S-row ids per tile; sentinel num_s
+    vals: jax.Array      # (T+1, M, tile) f32 — densified indexed values
+    counts: jax.Array    # (T+1,) int32
+    pref_ub: jax.Array   # (N,) f32 — UB of each row's unindexed prefix (0 for IIB)
+    crossing: jax.Array  # (N,) int32 — first indexed tile per row (0 for IIB)
+    tile: int            # static
+    num_s: int           # static
+
+    def tree_flatten(self):
+        return (self.rows, self.vals, self.counts, self.pref_ub, self.crossing), (
+            self.tile,
+            self.num_s,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, static, leaves):
+        rows, vals, counts, pref_ub, crossing = leaves
+        tile, num_s = static
+        return cls(rows, vals, counts, pref_ub, crossing, tile, num_s)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.rows.shape[0] - 1
+
+    @property
+    def max_rows(self) -> int:
+        return self.rows.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# builder
+# ---------------------------------------------------------------------------
+
+def _sorted_features(s_block: SparseBatch, rank: Optional[jax.Array]):
+    """Per-row features sorted by (permuted) dimension; returns (p_idx, vals, valid)."""
+    valid = s_block.indices < s_block.dim
+    if rank is not None:
+        lut = jnp.concatenate([rank.astype(jnp.int32), jnp.array([s_block.dim], jnp.int32)])
+        p_idx = lut[jnp.minimum(s_block.indices, s_block.dim)]
+    else:
+        p_idx = s_block.indices
+    p_idx = jnp.where(valid, p_idx, s_block.dim)
+    order = jnp.argsort(p_idx, axis=1, stable=True)
+    sp = jnp.take_along_axis(p_idx, order, axis=1)
+    sv = jnp.take_along_axis(s_block.values, order, axis=1)
+    sval = sp < s_block.dim
+    return sp, sv, sval, order
+
+
+def build_tile_index(
+    s_block: SparseBatch,
+    max_rows: int,
+    tile: int = DEFAULT_TILE,
+    rank: Optional[jax.Array] = None,
+    maxw: Optional[jax.Array] = None,
+    min_prune_score: Optional[jax.Array] = None,
+    uniform: bool = False,
+) -> TileIndex:
+    """Build the tile index.  IIB: leave ``maxw``/``min_prune_score`` None.
+
+    IIIB: pass ``rank`` (dim -> frequency position, most frequent = 0),
+    ``maxw`` = maxWeight_d(B_r) in ORIGINAL dim space, and the running
+    MinPruneScore.  Rows' feature prefixes whose cumulative UB never exceeds
+    the threshold stay unindexed (paper Alg. 4 lines 8-14).
+    """
+    n, f = s_block.indices.shape
+    d = s_block.dim
+    t_total = num_tiles(d, tile)
+
+    sp, sv, sval, order = _sorted_features(s_block, rank)
+
+    if min_prune_score is None:
+        crossing = jnp.zeros((n,), jnp.int32)
+        pref_ub = jnp.zeros((n,), jnp.float32)
+    else:
+        maxw_pad = jnp.concatenate([maxw.astype(jnp.float32), jnp.zeros((1,), jnp.float32)])
+        m = maxw_pad[jnp.minimum(s_block.indices, d)]
+        ms = jnp.take_along_axis(jnp.where(s_block.indices < d, m, 0.0), order, axis=1)
+        contrib = jnp.where(sval, ms * sv, 0.0)
+        cum = jnp.cumsum(contrib, axis=1)
+        crossed = (cum > min_prune_score) & sval
+        any_crossed = crossed.any(axis=1)
+        first_pos = jnp.argmax(crossed, axis=1)
+        crossing_dim = jnp.take_along_axis(sp, first_pos[:, None], axis=1)[:, 0]
+        crossing = jnp.where(any_crossed, crossing_dim // tile, t_total).astype(jnp.int32)
+        prev = jnp.where(first_pos > 0, jnp.take_along_axis(cum, jnp.maximum(first_pos - 1, 0)[:, None], axis=1)[:, 0], 0.0)
+        # rows that never cross keep their FULL mass unindexed
+        full_ub = cum[:, -1]
+        pref_ub = jnp.where(any_crossed, prev, full_ub).astype(jnp.float32)
+        if uniform:
+            # flatten to the block-min crossing (jit-able IIIB variant):
+            # strictly MORE gets indexed, so exactness is preserved; the
+            # dense-prefix pass covers everything below c_min uniformly.
+            c_min = jnp.min(crossing)
+            crossing = jnp.full_like(crossing, c_min)
+            tile_of = jnp.where(sval, sp // tile, t_total)
+            pref_contrib = jnp.where(tile_of < c_min, contrib, 0.0)
+            pref_ub = jnp.sum(pref_contrib, axis=1).astype(jnp.float32)
+
+    f_tid = jnp.where(sval, sp // tile, t_total).astype(jnp.int32)
+    indexed = sval & (f_tid >= crossing[:, None])
+
+    # occupancy (N, T): row n has indexed mass in tile t
+    occ = jnp.zeros((n, t_total + 1), jnp.int32)
+    occ = occ.at[jnp.arange(n)[:, None], jnp.where(indexed, f_tid, t_total)].add(1)
+    occ = occ[:, :t_total] > 0
+
+    counts = occ.sum(axis=0).astype(jnp.int32)  # (T,)
+    # pack occupied rows to the front, per tile
+    order_rows = jnp.argsort(~occ, axis=0, stable=True)  # (N, T)
+    m_rows = min(max_rows, n)
+    rows = order_rows[:m_rows, :].T.astype(jnp.int32)    # (T, M)
+    slot = jnp.arange(m_rows, dtype=jnp.int32)[None, :]
+    row_valid = slot < counts[:, None]
+    rows = jnp.where(row_valid, rows, n)
+
+    # densify indexed values per (tile, listed row) — sequential over tiles to
+    # bound memory (lax.map, not vmap)
+    def one_tile(args):
+        t, rows_t, rv_t = args
+        safe = jnp.minimum(rows_t, n - 1)
+        gi = sp[safe]                 # (M, F) permuted dims
+        gv = sv[safe]
+        gidx = indexed[safe]
+        rel = gi - t * tile
+        ok = (rel >= 0) & (rel < tile) & gidx & rv_t[:, None]
+        rel = jnp.where(ok, rel, tile)
+        patch = jnp.zeros((m_rows, tile + 1), jnp.float32)
+        patch = patch.at[jnp.arange(m_rows)[:, None], rel].add(jnp.where(ok, gv, 0.0))
+        return patch[:, :tile]
+
+    tids = jnp.arange(t_total, dtype=jnp.int32)
+    vals = jax.lax.map(one_tile, (tids, rows, row_valid))  # (T, M, tile)
+
+    # sentinel tile
+    rows = jnp.concatenate([rows, jnp.full((1, m_rows), n, jnp.int32)], axis=0)
+    vals = jnp.concatenate([vals, jnp.zeros((1, m_rows, tile), jnp.float32)], axis=0)
+    counts = jnp.concatenate([counts, jnp.zeros((1,), jnp.int32)])
+
+    return TileIndex(
+        rows=rows, vals=vals, counts=counts, pref_ub=pref_ub, crossing=crossing,
+        tile=tile, num_s=n,
+    )
+
+
+def max_rows_bound(
+    s_block: SparseBatch,
+    tile: int = DEFAULT_TILE,
+    rank: Optional[np.ndarray] = None,
+    maxw: Optional[np.ndarray] = None,
+    min_prune_score: float = -np.inf,
+    bucket: int = 128,
+) -> int:
+    """Host-side concrete bound on the longest tile list (numpy mirror of the
+    builder's occupancy computation), bucketed to limit recompilation."""
+    idx = np.asarray(s_block.indices)
+    val = np.asarray(s_block.values)
+    d = s_block.dim
+    valid = idx < d
+    p_idx = np.where(valid, (rank[np.minimum(idx, d - 1)] if rank is not None else idx), d)
+    order = np.argsort(p_idx, axis=1, kind="stable")
+    sp = np.take_along_axis(p_idx, order, axis=1)
+    sval = sp < d
+    t_total = num_tiles(d, tile)
+    if min_prune_score == -np.inf or maxw is None:
+        crossing = np.zeros(idx.shape[0], np.int64)
+    else:
+        m = np.where(valid, maxw[np.minimum(idx, d - 1)], 0.0)
+        ms = np.take_along_axis(m * val, order, axis=1)
+        cum = np.cumsum(np.where(sval, ms, 0.0), axis=1)
+        crossed = (cum > min_prune_score) & sval
+        any_c = crossed.any(axis=1)
+        first = np.where(any_c, np.argmax(crossed, axis=1), 0)
+        cdim = np.take_along_axis(sp, first[:, None], axis=1)[:, 0]
+        crossing = np.where(any_c, cdim // tile, t_total)
+    f_tid = np.where(sval, sp // tile, t_total)
+    indexed = sval & (f_tid >= crossing[:, None])
+    occ = np.zeros((idx.shape[0], t_total + 1), np.int64)
+    np.add.at(occ, (np.arange(idx.shape[0])[:, None], np.where(indexed, f_tid, t_total)), 1)
+    longest = int((occ[:, :t_total] > 0).sum(axis=0).max(initial=0))
+    longest = max(longest, 1)
+    return min(int(-(-longest // bucket) * bucket), idx.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# scoring with the index
+# ---------------------------------------------------------------------------
+
+def tile_scores(
+    r_dense_tiles: jax.Array,    # (T, |Br|, tile) — permuted-dim dense tiles of B_r
+    index: TileIndex,
+    active_tiles: jax.Array,     # (A,) int32 tile ids; pad with n_tiles (sentinel)
+) -> jax.Array:
+    """(|Br|, |Bs|) accumulated scores over the given tiles.
+
+    Work per tile ∝ list length M (not |Bs|): one (|Br|, tile)@(tile, M)
+    matmul + a column scatter-add — the C3 cost shape on MXU hardware.
+    """
+    n_r = r_dense_tiles.shape[1]
+    r_pad = jnp.concatenate(
+        [r_dense_tiles, jnp.zeros((1,) + r_dense_tiles.shape[1:], r_dense_tiles.dtype)], axis=0
+    )
+
+    def body(acc, t):
+        rt = r_pad[t]                       # (|Br|, tile)
+        v = index.vals[t]                   # (M, tile)
+        p = jax.lax.dot_general(
+            rt, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                   # (|Br|, M)
+        acc = acc.at[:, index.rows[t]].add(p)
+        return acc, None
+
+    acc = jnp.zeros((n_r, index.num_s + 1), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc, active_tiles)
+    return acc[:, : index.num_s]
+
+
+def dense_r_tiles(r_block: SparseBatch, rank: Optional[jax.Array], tile: int = DEFAULT_TILE) -> jax.Array:
+    """(T, |Br|, tile) dense tiles of the R block in permuted dim space."""
+    n, _ = r_block.indices.shape
+    d = r_block.dim
+    t_total = num_tiles(d, tile)
+    valid = r_block.indices < d
+    if rank is not None:
+        lut = jnp.concatenate([rank.astype(jnp.int32), jnp.array([d], jnp.int32)])
+        p_idx = lut[jnp.minimum(r_block.indices, d)]
+    else:
+        p_idx = jnp.where(valid, r_block.indices, d)
+    p_idx = jnp.where(valid, p_idx, t_total * tile)
+    out = jnp.zeros((n, t_total * tile + 1), jnp.float32)
+    out = out.at[jnp.arange(n)[:, None], jnp.minimum(p_idx, t_total * tile)].add(
+        jnp.where(valid, r_block.values, 0.0)
+    )
+    return out[:, : t_total * tile].reshape(n, t_total, tile).transpose(1, 0, 2)
+
+
+def active_tile_list(occ_any: np.ndarray, bucket: int = 8) -> np.ndarray:
+    """Host-side: concrete list of tiles with any R-block mass, padded with the
+    sentinel tile id to a bucket multiple (bounds recompiles)."""
+    (tiles,) = np.nonzero(occ_any)
+    n_tiles = occ_any.shape[0]
+    pad = -(-max(len(tiles), 1) // bucket) * bucket
+    out = np.full(pad, n_tiles, dtype=np.int32)
+    out[: len(tiles)] = tiles
+    return out

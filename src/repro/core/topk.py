@@ -1,0 +1,71 @@
+"""Streaming top-k state for the KNN join.
+
+The paper keeps, per outer vector r, a KNN candidate set and a
+``pruneScore(r)`` = similarity of r's current k-th nearest neighbour.  We
+vectorize this over a whole R block: the state is a pair of (N, k) arrays
+(scores descending, global S ids), merged with each new block of scores via
+``jax.lax.top_k`` on the concatenation.  ``prune_scores`` is column k-1 —
+−inf until k candidates have been seen, exactly like the paper's
+initialization (InitPruneScore, Algorithm 1 line 3).
+
+``MinPruneScore`` (IIIB §4.4) is the min over the block.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class TopKState:
+    scores: jax.Array  # (N, k) f32, descending; -inf for empty slots
+    ids: jax.Array     # (N, k) int32, global S indices; -1 for empty slots
+
+    def tree_flatten(self):
+        return (self.scores, self.ids), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+    @property
+    def k(self) -> int:
+        return self.scores.shape[1]
+
+
+def init_topk(num_vectors: int, k: int) -> TopKState:
+    return TopKState(
+        scores=jnp.full((num_vectors, k), NEG_INF, dtype=jnp.float32),
+        ids=jnp.full((num_vectors, k), -1, dtype=jnp.int32),
+    )
+
+
+def topk_update(state: TopKState, new_scores: jax.Array, new_ids: jax.Array) -> TopKState:
+    """Merge an (N, M) block of candidate scores into the running top-k.
+
+    ``new_ids`` is (M,) (shared columns — the usual case: a block of S) or
+    (N, M).  Invalid candidates must carry score −inf.
+    """
+    n, m = new_scores.shape
+    if new_ids.ndim == 1:
+        new_ids = jnp.broadcast_to(new_ids[None, :], (n, m))
+    all_scores = jnp.concatenate([state.scores, new_scores.astype(jnp.float32)], axis=1)
+    all_ids = jnp.concatenate([state.ids, new_ids.astype(jnp.int32)], axis=1)
+    top_scores, top_pos = jax.lax.top_k(all_scores, state.k)
+    top_ids = jnp.take_along_axis(all_ids, top_pos, axis=1)
+    return TopKState(scores=top_scores, ids=top_ids)
+
+
+def prune_scores(state: TopKState) -> jax.Array:
+    """(N,) — pruneScore(r): the k-th best score so far (−inf if < k seen)."""
+    return state.scores[:, -1]
+
+
+def min_prune_score(state: TopKState) -> jax.Array:
+    """Scalar MinPruneScore = min_{r in block} pruneScore(r) (IIIB threshold)."""
+    return jnp.min(prune_scores(state))

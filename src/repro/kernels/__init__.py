@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  knn_score  — tile-skipping blocked score matmul (IIB/IIIB scoring)
+  topk_merge — streaming top-k candidate-set insert
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper with padding plumbing), ref.py (pure-jnp oracle).  Kernels
+target TPU; on CPU they run under interpret=True (tests, this container).
+"""

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: flash attention (online-softmax blocked attention).
+
+Why it exists here: the roofline analysis (§Roofline) shows every
+attention arch is MEMORY-bound, dominated by the S² score/softmax chains
+round-tripping HBM (select_n / exp / div fusions at ~4–6 × S² × 4B per
+layer).  Blocking the computation so the (bq × bk) score tile lives only
+in VMEM reduces attention HBM traffic from O(S²) to O(S·d) — the
+canonical flash-attention argument, restated for the TPU memory
+hierarchy (HBM -> VMEM -> VREG; MXU consumes 128-aligned tiles).
+
+Layout:
+  q:  (BH, Sq, hd)   — batch*heads flattened, MXU-aligned hd
+  k,v:(BH, Skv, hd)  — GQA handled by ops.py (kv head replication map)
+  out:(BH, Sq, hd)
+
+Grid: (BH, Sq/bq, Skv/bk) — kv innermost, so the output tile and the
+online-softmax running stats (m, l) persist in VMEM across the kv walk.
+
+VMEM working set (bq = bk = 128, hd = 128, f32):
+  q tile 64 KiB + k,v tiles 128 KiB + scores 64 KiB + acc 64 KiB + stats
+  ≈ 0.4 MiB — far under the 16 MiB/core budget; room for double-buffered
+  prefetch of the next (k, v) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, bq: int, bk: int, causal: bool, sm_scale: float,
+                  window: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq, hd)
+    k = k_ref[0]                                   # (bk, hd)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale                                   # (bq, bk)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (exp(NEG - NEG) would be 1): alpha/p underflow
+    p = jnp.exp(s - m_new)                         # (bq, bk)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                # (bq, 1)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bq", "bk", "causal", "sm_scale", "window", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,      # (BH, Sq, hd)
+    k: jax.Array,      # (BH, Skv, hd)
+    v: jax.Array,
+    bq: int = 128,
+    bk: int = 128,
+    causal: bool = True,
+    sm_scale: float = 1.0,
+    window: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    assert sq % bq == 0 and skv % bk == 0, "ops.py pads"
+    grid = (bh, sq // bq, skv // bk)
+
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, bq=bq, bk=bk, causal=causal,
+            sm_scale=sm_scale, window=window,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((bq, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Public op: flash attention with GQA plumbing and padding.
+
+``flash_sdpa`` mirrors models/attention._sdpa's signature: q (B,S,H,hd),
+k/v (B,T,KVH,hd) -> (B,S,H,hd).  Query-head groups share a kv head (GQA);
+padding rows are handled by the causal/window mask plus output slicing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+
+
+def _pad_seq(x, block):
+    s = x.shape[1]
+    target = -(-s // block) * block
+    if target == s:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, target - s)
+    return jnp.pad(x, pad)
+
+
+def flash_sdpa(
+    q: jax.Array,      # (B, Sq, H, hd)
+    k: jax.Array,      # (B, Skv, KVH, hd)
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    sm_scale = 1.0 / (hd ** 0.5)
+
+    qp = _pad_seq(q, bq)
+    kp = _pad_seq(k, bk)
+    vp = _pad_seq(v, bk)
+
+    # (B, S, H, hd) -> (B*H, S, hd); kv head j serves query heads [j*g, (j+1)*g)
+    qf = qp.transpose(0, 2, 1, 3).reshape(b * h, qp.shape[1], hd)
+    kf = jnp.repeat(kp.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, kp.shape[1], hd)
+    vf = jnp.repeat(vp.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, vp.shape[1], hd)
+
+    out = flash_attention_pallas(
+        qf, kf, vf, bq=bq, bk=bk, causal=causal,
+        sm_scale=sm_scale, window=window, interpret=interpret,
+    )
+    out = out.reshape(b, h, qp.shape[1], hd).transpose(0, 2, 1, 3)
+    return out[:, :sq]

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def attention_ref(
+    q: jax.Array,      # (BH, Sq, hd)
+    k: jax.Array,      # (BH, Skv, hd)
+    v: jax.Array,
+    causal: bool = True,
+    sm_scale: float = 1.0,
+    window: int = 0,
+) -> jax.Array:
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * sm_scale
+    sq, skv = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    # rows with no visible key: zero output (kernel semantics)
+    any_visible = mask.any(axis=1)[None, :, None]
+    out = jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32))
+    return jnp.where(any_visible, out, 0.0).astype(q.dtype)

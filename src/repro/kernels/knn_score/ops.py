@@ -1,0 +1,91 @@
+"""Public op: tile-skipping KNN scoring with padding/active-list plumbing.
+
+``knn_score(r_block, s_block)`` takes two SparseBatches, densifies them
+into dim-tiles, derives the per-(r-block, s-block) active tile lists from
+occupancy (host- or trace-side), and calls the Pallas kernel.  On CPU
+(tests, this container) ``interpret=True`` executes the kernel body in
+Python; on TPU the same code path compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.knn_score.kernel import knn_score_pallas
+from repro.sparse.format import SparseBatch, num_tiles
+
+
+def _pad_rows(x: jax.Array, block: int) -> jax.Array:
+    n = x.shape[1]
+    target = -(-n // block) * block
+    if target == n:
+        return x
+    pad = jnp.zeros((x.shape[0], target - n, x.shape[2]), x.dtype)
+    return jnp.concatenate([x, pad], axis=1)
+
+
+def dense_tiles_with_sentinel(batch: SparseBatch, tile: int) -> jax.Array:
+    """(T+1, N, tile) — dense dim-tiles plus a trailing zero sentinel tile."""
+    from repro.core.index import dense_r_tiles
+
+    t = dense_r_tiles(batch, None, tile)          # (T, N, tile)
+    return jnp.concatenate([t, jnp.zeros((1,) + t.shape[1:], t.dtype)], axis=0)
+
+
+def active_lists(
+    r_occ: np.ndarray,  # (NR, T) bool occupancy
+    s_occ: np.ndarray,  # (NS, T)
+    block_r: int,
+    block_s: int,
+    bucket: int = 8,
+) -> np.ndarray:
+    """(nR, nS, A) int32 — tiles occupied by BOTH blocks, sentinel-padded.
+
+    Host-side: the list lengths are data-dependent (this is the point — the
+    kernel's work is proportional to them), so they are materialized
+    concretely and bucketed to bound recompilation.
+    """
+    t_total = r_occ.shape[1]
+    n_rb = -(-r_occ.shape[0] // block_r)
+    n_sb = -(-s_occ.shape[0] // block_s)
+    lists = []
+    max_len = 1
+    for i in range(n_rb):
+        row = []
+        r_any = r_occ[i * block_r : (i + 1) * block_r].any(axis=0)
+        for j in range(n_sb):
+            s_any = s_occ[j * block_s : (j + 1) * block_s].any(axis=0)
+            (tiles,) = np.nonzero(r_any & s_any)
+            row.append(tiles)
+            max_len = max(max_len, len(tiles))
+        lists.append(row)
+    a_len = -(-max_len // bucket) * bucket
+    out = np.full((n_rb, n_sb, a_len), t_total, dtype=np.int32)
+    for i in range(n_rb):
+        for j in range(n_sb):
+            out[i, j, : len(lists[i][j])] = lists[i][j]
+    return out
+
+
+def knn_score(
+    r_block: SparseBatch,
+    s_block: SparseBatch,
+    tile: int = 128,
+    block_r: int = 256,
+    block_s: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """(|Br|, |Bs|) exact dot-product scores via the tile-skipping kernel."""
+    from repro.sparse.format import tile_occupancy
+
+    assert r_block.dim == s_block.dim
+    r_tiles = _pad_rows(dense_tiles_with_sentinel(r_block, tile), block_r)
+    s_tiles = _pad_rows(dense_tiles_with_sentinel(s_block, tile), block_s)
+    r_occ = np.asarray(tile_occupancy(r_block, tile))
+    s_occ = np.asarray(tile_occupancy(s_block, tile))
+    active = jnp.asarray(active_lists(r_occ, s_occ, block_r, block_s))
+    out = knn_score_pallas(
+        r_tiles, s_tiles, active, block_r=block_r, block_s=block_s, interpret=interpret
+    )
+    return out[: r_block.num_vectors, : s_block.num_vectors]

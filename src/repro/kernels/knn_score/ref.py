@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the knn_score kernel.
+
+Semantics: out[i, j] = Σ over the active-tile list of block (i//br, j//bs)
+of dot(r_tiles[t, i], s_tiles[t, j]).  When the active lists cover every
+occupied tile exactly once, this equals the dense dot product.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def knn_score_ref(
+    r_tiles: jax.Array,   # (T+1, NR, tile)
+    s_tiles: jax.Array,   # (T+1, NS, tile)
+    active: jax.Array,    # (nR, nS, A)
+    block_r: int = 256,
+    block_s: int = 256,
+) -> jax.Array:
+    _, n_r, _ = r_tiles.shape
+    _, n_s, _ = s_tiles.shape
+    n_rb, n_sb, a_len = active.shape
+    out = jnp.zeros((n_r, n_s), jnp.float32)
+    for i in range(n_rb):
+        for j in range(n_sb):
+            acc = jnp.zeros((block_r, block_s), jnp.float32)
+            for a in range(a_len):
+                t = active[i, j, a]
+                rt = jax.lax.dynamic_index_in_dim(r_tiles, t, 0, keepdims=False)[
+                    i * block_r : (i + 1) * block_r
+                ]
+                st = jax.lax.dynamic_index_in_dim(s_tiles, t, 0, keepdims=False)[
+                    j * block_s : (j + 1) * block_s
+                ]
+                acc = acc + rt @ st.T
+            out = out.at[
+                i * block_r : (i + 1) * block_r, j * block_s : (j + 1) * block_s
+            ].set(acc)
+    return out
+
+
+def dense_oracle(r_tiles: jax.Array, s_tiles: jax.Array) -> jax.Array:
+    """Full dense dot product (sentinel tile is all-zero, so including it is safe)."""
+    r = jnp.moveaxis(r_tiles, 0, 1).reshape(r_tiles.shape[1], -1)
+    s = jnp.moveaxis(s_tiles, 0, 1).reshape(s_tiles.shape[1], -1)
+    return (r @ s.T).astype(jnp.float32)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for topk_merge: concat + lax.top_k (== core.topk.topk_update)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_merge_ref(
+    state_scores: jax.Array,
+    state_ids: jax.Array,
+    cand_scores: jax.Array,
+    cand_ids: jax.Array,
+):
+    k = state_scores.shape[1]
+    sc = jnp.concatenate([state_scores, cand_scores.astype(jnp.float32)], axis=1)
+    ids = jnp.concatenate([state_ids, cand_ids.astype(jnp.int32)], axis=1)
+    top_s, pos = jax.lax.top_k(sc, k)
+    top_i = jnp.take_along_axis(ids, pos, axis=1)
+    return top_s, top_i

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: fused chunked RWKV6 (WKV) time mixing.
+
+The §Perf hillclimb left rwkv6-3b train memory-bound on the elementwise
+r/k/v/decay chains of the chunked WKV (EXPERIMENTS.md Cell A): each
+chunk's exp/cumsum factor tensors and the per-step state snapshots
+round-trip HBM.  This kernel fuses one chunk's ENTIRE evaluation —
+decay cumsums, the decayed r/k factors, the masked intra-chunk score
+matmul, the inter-chunk state application, and the state update — in
+VMEM; HBM traffic drops to the r/k/v/w tiles in + the output tile +
+one (K, K) state residency per head.
+
+Layout:
+  r, k, v, lw: (BH, T, K)  — batch·heads flattened; K = head size
+  u:           (K,)        — per-channel bonus (head-specific: ops.py
+                             flattens heads into BH and passes u per call
+                             via a (BH, K) operand)
+  out:         (BH, T, K)
+
+Grid: (BH, T/C) — the chunk walk is innermost/sequential, so the (K, K)
+state scratch persists across chunks of one head and resets at chunk 0.
+
+VMEM per step (C=128, K=64, f32): 4 tiles C×K (128 KiB) + scores C×C
+(64 KiB) + state K×K (16 KiB) ≈ 0.25 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CLAMP = 30.0
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref):
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)          # (C, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)        # ≤ 0
+    u = u_ref[0].astype(jnp.float32)          # (1, K) block -> (K,)
+
+    lcum_inc = jnp.cumsum(lw, axis=0)         # inclusive
+    lcum = lcum_inc - lw                      # exclusive (state before token i)
+    ltot = lcum_inc[-1:]                      # (1, K)
+
+    ri = r * jnp.exp(lcum)                                    # (C, K)
+    kj = k * jnp.exp(jnp.clip(-lcum_inc, -CLAMP, CLAMP))
+    scores = jax.lax.dot_general(
+        ri, kj, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                          # (C, C)
+    c = scores.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    scores = jnp.where(col < row, scores, 0.0)                 # strictly past
+    intra = jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    diag = jnp.sum(r * (k * u), axis=1, keepdims=True)         # (C, 1)
+    intra = intra + diag * v
+
+    # inter-chunk: apply carried state, then update it
+    s = s_ref[...]                                             # (K, K)
+    inter = jax.lax.dot_general(
+        ri, s, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    k_carry = k * jnp.exp(jnp.clip(ltot - lcum_inc, None, CLAMP))
+    s_new = s * jnp.exp(ltot).T + jax.lax.dot_general(
+        k_carry, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_ref[...] = s_new
+    o_ref[0, ...] = (intra + inter).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_pallas(
+    r: jax.Array,      # (BH, T, K)
+    k: jax.Array,
+    v: jax.Array,
+    lw: jax.Array,     # (BH, T, K) log decays, ≤ 0
+    u: jax.Array,      # (BH, K) per-head bonus
+    chunk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, t, kk = r.shape
+    assert t % chunk == 0, "ops.py pads"
+    grid = (bh, t // chunk)
+
+    tile = pl.BlockSpec((1, chunk, kk), lambda b, n: (b, n, 0))
+    u_spec = pl.BlockSpec((1, kk), lambda b, n: (b, 0))
+
+    return pl.pallas_call(
+        _wkv_kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, tile, u_spec],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((bh, t, kk), r.dtype),
+        scratch_shapes=[pltpu.VMEM((kk, kk), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u)

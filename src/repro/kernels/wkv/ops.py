@@ -1,0 +1,29 @@
+"""Public op: fused WKV with model-layout plumbing.
+
+``wkv(r, k, v, lw, u)`` takes the model layout (B, T, H, K) + u (H, K),
+flattens heads into the grid batch, pads T to the chunk, and calls the
+Pallas kernel.  Drop-in for models/rwkv6._chunked_wkv on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv.kernel import wkv_pallas
+
+
+def wkv(r, k, v, lw, u, chunk: int = 128, interpret: bool = True):
+    b, t, h, kk = r.shape
+    pad = (-t) % chunk
+
+    def flat(x):
+        x = x.transpose(0, 2, 1, 3).reshape(b * h, t, kk)
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        return x
+
+    uf = jnp.broadcast_to(u[None], (b, h, kk)).reshape(b * h, kk)
+    out = wkv_pallas(flat(r), flat(k), flat(v), flat(lw), uf,
+                     chunk=chunk, interpret=interpret)
+    out = out[:, :t].reshape(b, h, t, kk).transpose(0, 2, 1, 3)
+    return out

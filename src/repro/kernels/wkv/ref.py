@@ -1,0 +1,32 @@
+"""Oracles for the WKV kernel: the exact sequential recurrence and the
+model's chunked-parallel form."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_sequential(r, k, v, lw, u):
+    """Exact token-by-token recurrence (the paper-of-record semantics).
+
+    r,k,v,lw: (BH, T, K); u: (BH, K).  o_t = r_t·(S_{t-1} + u ⊙ k_t v_tᵀ);
+    S_t = diag(e^{lw_t}) S_{t-1} + k_tᵀ v_t.
+    """
+    bh, t, kk = r.shape
+
+    def head(r, k, v, lw, u):
+        def step(s, xs):
+            rt, kt, vt, lwt = xs
+            kv = jnp.outer(kt, vt)
+            out = rt @ (s + u[:, None] * kv)
+            s = s * jnp.exp(lwt)[:, None] + kv
+            return s, out
+
+        s0 = jnp.zeros((kk, kk), jnp.float32)
+        _, out = jax.lax.scan(step, s0, (r, k, v, lw))
+        return out
+
+    return jax.vmap(head)(
+        r.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), lw.astype(jnp.float32), u.astype(jnp.float32),
+    ).astype(r.dtype)

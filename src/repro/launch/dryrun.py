@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+512 placeholder host devices build the production meshes; every cell's
+step function is lowered with ShapeDtypeStruct inputs (no allocation),
+compiled, and its memory_analysis / cost_analysis / collective schedule
+recorded to JSON for the roofline (benchmarks/roofline.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.base import all_arch_names, get_config
+from repro.launch import shapes as SH
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (
+    batch_shardings,
+    cache_shardings,
+    opt_shardings,
+    param_shardings,
+)
+from repro.launch.steps import (
+    StepOptions,
+    abstract_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every dtype[shape] group in an HLO result type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str):
+    """Per-op-kind {count, bytes} from post-SPMD HLO (per-device shapes).
+
+    bytes = result-shape bytes of each collective op (the '-start' form is
+    counted once; '-done' carries no new traffic).  all-reduce is weighted
+    2x (ring reduce+broadcast); others 1x.
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) ([a-z\-]+)(?:-start)?\(", line)
+        if not m:
+            continue
+        result_ty, op = m.groups()
+        if op.endswith("-done"):
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in COLLECTIVES:
+            continue
+        b = _shape_bytes(result_ty)
+        if base == "all-reduce":
+            b *= 2
+        out[base]["count"] += 1
+        out[base]["bytes"] += b
+    return out
+
+
+def _spec_to_json(tree):
+    return jax.tree.map(lambda s: str(s.spec) if hasattr(s, "spec") else str(s), tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, opts: StepOptions):
+    """Lower + compile one cell. Returns the result record dict."""
+    cfg = get_config(arch)
+    shape = SH.SHAPES[shape_name]
+    skip = SH.cell_supported(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "params": cfg.param_count(),
+    }
+    if skip:
+        rec["skipped"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+
+    # per-arch tuned distribution default (§Perf) unless overridden
+    import dataclasses as _dc
+
+    if opts.sharding_mode == "auto":
+        # tuned modes are TRAIN-cell defaults; serve batches (32/128/1) do
+        # not divide the fsdp axis product, so serving always uses 2d
+        mode = cfg.sharding_mode if shape.kind == "train" else "2d"
+        opts = _dc.replace(opts, sharding_mode=mode)
+    rec["sharding_mode"] = opts.sharding_mode
+
+    params_abs, opt_abs = abstract_train_state(cfg)
+    p_sh = param_shardings(params_abs, mesh, opts.sharding_mode)
+    o_sh = opt_shardings(opt_abs, p_sh, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            batch_abs = SH.train_input_specs(cfg, shape)
+            b_sh = batch_shardings(batch_abs, mesh, opts.sharding_mode)
+            step = make_train_step(cfg, mesh, opts)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            batch_abs = SH.prefill_input_specs(cfg, shape)
+            cache_abs = SH.abstract_cache(cfg, shape)
+            b_sh = batch_shardings(batch_abs, mesh, opts.sharding_mode)
+            c_sh = cache_shardings(cache_abs, mesh, shape.global_batch)
+            step = make_prefill_step(cfg, mesh, opts)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, b_sh, c_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_abs, batch_abs, cache_abs)
+        else:  # decode
+            specs = SH.decode_input_specs(cfg, shape)
+            c_sh = cache_shardings(specs["cache"], mesh, shape.global_batch)
+            t_sh = batch_shardings(specs["token"], mesh, opts.sharding_mode)
+            step = make_decode_step(cfg, mesh, opts)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, t_sh, c_sh, None),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(
+                params_abs, specs["token"], specs["cache"], specs["pos"]
+            )
+
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    # ---- analyses ----------------------------------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            rec["memory_analysis"] = {
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            }
+    except Exception as e:  # noqa: BLE001
+        rec["memory_analysis_error"] = str(e)
+
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["cost_analysis"] = {
+            k: float(v)
+            for k, v in cost.items()
+            if k in ("flops", "bytes accessed", "transcendentals", "utilization operand")
+            or k.startswith("bytes accessed")
+        }
+    except Exception as e:  # noqa: BLE001
+        rec["cost_analysis_error"] = str(e)
+
+    hlo = compiled.as_text()
+    rec["collectives"] = parse_collectives(hlo)
+    rec["hlo_bytes"] = len(hlo)
+    rec["n_chips"] = n_chips
+
+    # trip-count-aware reanalysis (cost_analysis counts scan bodies once)
+    try:
+        from repro.launch.hlo_analysis import analyze
+
+        a = analyze(hlo, n_devices=n_chips)
+        rec["hlo_analysis"] = {
+            "flops_per_chip": a.flops,
+            "hbm_bytes_per_chip": a.hbm_bytes,
+            "collective_bytes_per_chip": a.total_collective_bytes(),
+            "collectives": a.collectives,
+            "collective_by_group": {str(k): v for k, v in a.collective_by_group.items()},
+        }
+    except Exception as e:  # noqa: BLE001
+        rec["hlo_analysis_error"] = str(e)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SH.SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--ce-chunk", type=int, default=512)
+    ap.add_argument("--sharding-mode", default="auto",
+                    choices=["auto", "2d", "fsdp"])
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+
+    opts = StepOptions(
+        ce_chunk=args.ce_chunk, seq_shard_activations=not args.no_seq_shard,
+        sharding_mode=args.sharding_mode,
+    )
+
+    archs = all_arch_names() if (args.all or not args.arch) else [args.arch]
+    shape_names = list(SH.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape_name in shape_names:
+            for mp in meshes:
+                mesh_tag = "pod2x16x16" if mp else "16x16"
+                name = f"{arch}_{shape_name}_{mesh_tag}{args.tag}"
+                path = os.path.join(args.out, name + ".json")
+                print(f"=== {name} ===", flush=True)
+                try:
+                    rec = lower_cell(arch, shape_name, mp, opts)
+                except Exception:  # noqa: BLE001
+                    failures += 1
+                    rec = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                        "error": traceback.format_exc(),
+                    }
+                    print(rec["error"], flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if "skipped" in rec:
+                    print(f"  SKIP: {rec['skipped']}", flush=True)
+                elif "error" not in rec:
+                    ca = rec.get("cost_analysis", {})
+                    ma = rec.get("memory_analysis", {})
+                    print(
+                        f"  ok: lower {rec.get('lower_s')}s compile {rec.get('compile_s')}s"
+                        f" flops={ca.get('flops', 0):.3e}"
+                        f" temp={ma.get('temp_size_in_bytes', 0)/2**30:.2f}GiB"
+                        f" args={ma.get('argument_size_in_bytes', 0)/2**30:.2f}GiB",
+                        flush=True,
+                    )
+                    coll = rec.get("collectives", {})
+                    tot = sum(v["bytes"] for v in coll.values())
+                    cnt = sum(v["count"] for v in coll.values())
+                    print(f"  collectives: {cnt} ops, {tot/2**20:.1f} MiB/device", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,368 @@
+"""Trip-count-aware analysis of post-SPMD compiled HLO text.
+
+``compiled.cost_analysis()`` counts ``while`` (lax.scan) bodies ONCE, so
+a 40-layer scanned transformer reports ~1/40th of its FLOPs.  This module
+re-derives the roofline numerators from the HLO text itself:
+
+* computations are parsed into ops; ``while`` trip counts are read from
+  the loop-condition's comparison constant (XLA canonicalizes counted
+  loops to ``lt(i, constant(T))``);
+* the module is walked from ENTRY with a multiplier stack (nested loops
+  multiply), accumulating:
+    - **flops**       — 2 · |result| · |contraction| per ``dot``
+    - **hbm_bytes**   — Σ (operand + result bytes) of every top-level op
+                        (fusion internals excluded: on-chip traffic)
+    - **collectives** — per-kind {count, bytes} with per-device result
+                        bytes (post-SPMD shapes are per-partition), and
+                        the participating-group size when parseable (to
+                        split intra-pod vs cross-pod traffic).
+
+All shapes in post-SPMD HLO are per-device, so every number here is
+per-chip; multiply by chip count for cluster totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\((.*?)\)\s*->\s*.*\{\s*$")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    elems = 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def _dims_of(ty: str) -> List[int]:
+    m = _SHAPE_RE.search(ty)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_ty: str
+    opcode: str
+    rest: str  # operand list + attributes (single line)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        h = _COMP_HDR_RE.match(line)
+        if h:
+            cur = Computation(h.group(1), [])
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, ty, opcode, rest = m.groups()
+            cur.ops.append(Op(name, ty, opcode, rest))
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _symbol_table(comps: Dict[str, Computation]) -> Dict[str, str]:
+    table: Dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops:
+            table[op.name] = op.result_ty
+    return table
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition (canonical: lt(i, T))."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", f"constant({op.rest}")
+            # rest begins right after "constant(" from the regex split
+            m2 = re.match(r"(\d+)\)", op.rest)
+            if m2:
+                best = max(best, int(m2.group(1)))
+            elif m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _operands(rest: str) -> List[str]:
+    """Operand %names of an op (before the attribute section)."""
+    # operands end at the first "), " or at the line's closing paren
+    depth = 1
+    out = []
+    cur = ""
+    for ch in rest:
+        if depth == 1 and ch == ")":
+            break
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        cur += ch
+    for tok in cur.split(","):
+        tok = tok.strip()
+        if tok.startswith("%"):
+            out.append(tok)
+    return out
+
+
+def _dot_flops(op: Op, symbols: Dict[str, str]) -> int:
+    res_elems, _ = _shape_elems_bytes(op.result_ty)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    ops_ = _operands(op.rest)
+    if not m or not ops_:
+        return 2 * res_elems  # dot with no contraction info: lower bound
+    lhs_ty = symbols.get(ops_[0], "")
+    lhs_dims = _dims_of(lhs_ty)
+    contract = 1
+    for i in m.group(1).split(","):
+        if i and int(i) < len(lhs_dims):
+            contract *= lhs_dims[int(i)]
+    return 2 * res_elems * contract
+
+
+_SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota",
+}
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=lambda: {
+            k: {"count": 0.0, "bytes": 0.0} for k in COLLECTIVES
+        }
+    )
+    # bytes by participating-group size (e.g. 16 = intra-pod TP ring,
+    # 32 = dp axis, 512 = cross-pod)
+    collective_by_group: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def total_collective_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.collectives.values())
+
+
+def _group_size(rest: str, default: int) -> int:
+    # iota format: replica_groups=[G,S]<=[N] -> groups of size S
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    # explicit: replica_groups={{0,1,2,...},{...}}
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _fusion_param_reads(fused: Computation, symbols: Dict[str, str]):
+    """For a fusion computation: (per-param read bytes, write discount).
+
+    * a parameter only feeding dynamic-slice/gather is read only at the
+      sliced windows;
+    * a parameter only feeding dynamic-update-slice as the UPDATED TARGET
+      is an in-place accumulation buffer: it is not re-read, and the
+      fusion's write is only the update window — the discount maps the
+      buffer's full size to the window size for the result-bytes side.
+    """
+    uses: Dict[str, List[Op]] = {}
+    for op in fused.ops:
+        for o in _operands(op.rest):
+            uses.setdefault(o, []).append(op)
+    reads: Dict[str, int] = {}
+    write_discount = 0  # bytes to subtract from the fusion result write
+    for op in fused.ops:
+        if op.opcode != "parameter":
+            continue
+        _, full = _shape_elems_bytes(op.result_ty)
+        consumers = uses.get(op.name, [])
+        if consumers and all(
+            c.opcode in ("dynamic-slice", "gather", "slice")
+            and _operands(c.rest) and _operands(c.rest)[0] == op.name
+            for c in consumers
+        ):
+            touched = sum(_shape_elems_bytes(c.result_ty)[1] for c in consumers)
+            reads[op.name] = min(full, touched)
+        elif consumers and all(
+            c.opcode == "dynamic-update-slice"
+            and _operands(c.rest) and _operands(c.rest)[0] == op.name
+            for c in consumers
+        ):
+            # in-place window update: read nothing, write only the window
+            window = 0
+            for c in consumers:
+                c_ops = _operands(c.rest)
+                if len(c_ops) > 1 and c_ops[1] in symbols:
+                    window += _shape_elems_bytes(symbols[c_ops[1]])[1]
+                else:
+                    window += _shape_elems_bytes(c.result_ty)[1]
+            reads[op.name] = 0
+            write_discount += max(full - window, 0)
+        else:
+            reads[op.name] = full
+    return reads, write_discount
+
+
+def _op_traffic(op: Op, code: str, symbols: Dict[str, str], comps: Dict[str, Computation]) -> int:
+    """HBM bytes moved by one top-level op (approximate, TPU-style fusion)."""
+    _, rb = _shape_elems_bytes(op.result_ty)
+    if code in ("dynamic-slice", "gather", "slice"):
+        return 2 * rb                      # read the window, write the result
+    if code == "dynamic-update-slice":
+        ops_ = _operands(op.rest)
+        ub = rb
+        if len(ops_) > 1 and ops_[1] in symbols:
+            _, ub = _shape_elems_bytes(symbols[ops_[1]])
+        return 2 * ub                      # in-place window update
+    if code in ("broadcast", "reshape", "copy-start", "copy-done"):
+        return rb
+    if code == "fusion":
+        m = re.search(r"calls=(%[\w.\-]+)", op.rest)
+        ops_ = _operands(op.rest)
+        if m and m.group(1) in comps:
+            reads, discount = _fusion_param_reads(comps[m.group(1)], symbols)
+            # fusion params are positional: param_i <-> operand_i; match by order
+            params = [o for o in comps[m.group(1)].ops if o.opcode == "parameter"]
+            read = 0
+            for i, name in enumerate(ops_):
+                if i < len(params):
+                    read += reads.get(params[i].name, 0)
+                elif name in symbols:
+                    _, nb = _shape_elems_bytes(symbols[name])
+                    read += nb
+            return max(rb - discount, 0) + read
+    ob = 0
+    for name in _operands(op.rest):
+        if name in symbols:
+            _, nb = _shape_elems_bytes(symbols[name])
+            ob += nb
+    return rb + ob
+
+
+def analyze(text: str, n_devices: int = 1, top: Optional[list] = None) -> Analysis:
+    """Walk the module; if ``top`` is a list, append per-op traffic records
+    ``(bytes, flops, opcode, jax_op_name, mult)`` for profiling."""
+    comps = parse_module(text)
+    symbols = _symbol_table(comps)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    out = Analysis()
+    visited_stack: List[str] = []
+
+    def walk(comp: Computation, mult: float):
+        if comp.name in visited_stack:  # recursive call guard
+            return
+        visited_stack.append(comp.name)
+        for op in comp.ops:
+            code = op.opcode
+            if code == "while":
+                m = re.search(r"condition=(%[\w.\-]+),\s*body=(%[\w.\-]+)", op.rest)
+                if m:
+                    cond_name, body_name = m.groups()
+                    trips = _trip_count(comps[cond_name]) if cond_name in comps else 1
+                    if body_name in comps:
+                        walk(comps[body_name], mult * trips)
+                continue
+            if code in ("call", "custom-call"):
+                m = re.search(r"to_apply=(%[\w.\-]+)", op.rest)
+                if m and m.group(1) in comps:
+                    walk(comps[m.group(1)], mult)
+            if code == "conditional":
+                for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|true_computation=(%[\w.\-]+), false_computation=(%[\w.\-]+))", op.rest):
+                    names = []
+                    if m.group(1):
+                        names = [n.strip() for n in m.group(1).split(",")]
+                    else:
+                        names = [m.group(2), m.group(3)]
+                    for n in names:
+                        if n in comps:
+                            walk(comps[n], mult)  # upper bound: both branches
+
+            # ---- flops ----------------------------------------------------
+            op_flops = 0
+            if code == "dot":
+                op_flops = _dot_flops(op, symbols)
+                out.flops += mult * op_flops
+            elif code == "convolution":
+                res_elems, _ = _shape_elems_bytes(op.result_ty)
+                op_flops = 2 * res_elems   # lower bound w/o kernel dims
+                out.flops += mult * op_flops
+
+            # ---- collectives ----------------------------------------------
+            base = code[:-6] if code.endswith("-start") else code
+            if base in COLLECTIVES and not code.endswith("-done"):
+                _, b = _shape_elems_bytes(op.result_ty)
+                if base == "all-reduce":
+                    b *= 2  # ring: reduce + broadcast passes
+                out.collectives[base]["count"] += mult
+                out.collectives[base]["bytes"] += mult * b
+                g = _group_size(op.rest, n_devices)
+                out.collective_by_group[g] = out.collective_by_group.get(g, 0.0) + mult * b
+                if top is not None:
+                    meta = re.search(r'op_name="([^"]+)"', op.rest)
+                    top.append((mult * b, 0, "COLL:" + base,
+                                (meta.group(1) if meta else "")[-110:], mult))
+                continue
+
+            # ---- hbm traffic ----------------------------------------------
+            if code in _SKIP_BYTES:
+                continue
+            traffic = _op_traffic(op, code, symbols, comps)
+            out.hbm_bytes += mult * traffic
+            if top is not None and traffic * mult > 0:
+                meta = re.search(r'op_name="([^"]+)"', op.rest)
+                top.append((mult * traffic, mult * op_flops, code,
+                            (meta.group(1) if meta else "")[-110:], mult))
+        visited_stack.pop()
+
+    walk(entry, 1.0)
+    if top is not None:
+        top.sort(key=lambda t: -t[0])
+    return out

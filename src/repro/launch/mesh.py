@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init).
+
+Mesh semantics (DESIGN.md §5):
+  pod   — slow inter-pod links (DCI); pure data parallelism, optionally
+          int8-compressed gradient all-reduce.
+  data  — intra-pod DP/FSDP axis (batch + parameter sharding).
+  model — tensor/expert/sequence parallel axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the real local devices (tests / CPU examples)."""
+    n = len(jax.devices())
+    assert data * model <= n, f"need {data * model} devices, have {n}"
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def dp_axes(mesh) -> tuple:
+    """Data-parallel axes: ('pod','data') on multi-pod, ('data',) otherwise."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,103 @@
+"""Assigned input-shape cells and abstract input specs.
+
+Four shapes per architecture (40 cells):
+
+  train_4k      seq 4,096   global_batch 256   -> train_step
+  prefill_32k   seq 32,768  global_batch 32    -> serve prefill
+  decode_32k    seq 32,768  global_batch 128   -> serve decode (1 new token)
+  long_500k     seq 524,288 global_batch 1     -> decode; SSM/hybrid only
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (no allocation) for
+every model input of the cell — tokens/labels for training, token +
+cache(+pos) for decode, stub frame/patch embeddings for audio/vlm.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_supported(cfg, shape: ShapeCell) -> Optional[str]:
+    """None if runnable; else the skip reason (recorded in EXPERIMENTS.md)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return (
+            "full-attention KV cache/scores are quadratic at 524k; "
+            "run only for ssm/hybrid (DESIGN.md §6)"
+        )
+    return None
+
+
+def _stub_inputs(cfg, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    out = {}
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.float32
+        )
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patches, cfg.d_model), jnp.float32
+        )
+    return out
+
+
+def train_input_specs(cfg, shape: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        **_stub_inputs(cfg, b),
+    }
+
+
+def prefill_input_specs(cfg, shape: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        **_stub_inputs(cfg, b),
+    }
+
+
+def abstract_cache(cfg, shape: ShapeCell):
+    """ShapeDtypeStruct pytree of the serve cache (KV at seq_len)."""
+    return jax.eval_shape(
+        lambda: M.make_serve_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def decode_input_specs(cfg, shape: ShapeCell):
+    """(token, cache, pos) abstract inputs for one decode step."""
+    b = shape.global_batch
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": abstract_cache(cfg, shape),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg, shape: ShapeCell):
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

@@ -1,0 +1,206 @@
+"""Step builders: train_step / prefill_step / decode_step, mesh-aware.
+
+These are THE functions the dry-run lowers and the trainer/server run.
+Everything here is pure-functional and jit-friendly; the mesh enters only
+through shardings (launch/sharding.py) and the activation constraint
+(models/shardctx.py).
+
+The training loss uses a **chunked cross-entropy**: hidden states are cut
+into sequence chunks and each chunk's (B, chunk, V) logits are computed,
+reduced (logsumexp + one-hot gold dot), and discarded inside a
+``lax.scan`` with remat — the full (B, S, V) logits tensor (40 GB/device
+for qwen-14b at 4k×256) never exists.  The unembed matmul is vocab-
+sharded over ``model``, so the per-chunk transient is
+B·chunk·V/|model| · 4 bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.shardctx import activation_sharding
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOptions:
+    """Knobs the perf loop turns (recorded per §Perf iteration)."""
+
+    ce_chunk: int = 512            # sequence chunk of the chunked CE
+    seq_shard_activations: bool = True   # Megatron-SP residual sharding
+    sharding_mode: str = "2d"      # "2d" (TP+FSDP) | "fsdp" (pure DP/FSDP)
+    grad_shard_constraint: bool = False  # pin grads to param sharding (RS > AR)
+    microbatch: int = 0            # >0: grad-accumulation microbatches
+    aux_weight: float = 0.01
+    adamw: AdamWConfig = AdamWConfig()
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+def chunked_ce(hidden, w_unembed, labels, chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """Mean CE over valid (label >= 0) positions, never materializing full logits.
+
+    hidden (B, S, d) bf16; w_unembed (d, V); labels (B, S) int32.
+    Returns (sum_nll, num_valid).
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} % ce_chunk {chunk} != 0"
+    n = s // chunk
+    hc = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)   # (n, B, c, d)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)         # (n, B, c)
+
+    def body(carry, xs):
+        nll_sum, count = carry
+        h, lab = xs
+        logits = (h @ w_unembed.astype(h.dtype)).astype(jnp.float32)  # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(jnp.maximum(lab, 0), logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        valid = (lab >= 0).astype(jnp.float32)
+        nll_sum = nll_sum + jnp.sum((lse - gold) * valid)
+        count = count + jnp.sum(valid)
+        return (nll_sum, count), None
+
+    body = jax.checkpoint(body)
+    (nll, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hc, lc))
+    return nll, cnt
+
+
+def loss_fn(params, cfg, batch: Dict, opts: StepOptions):
+    hidden, aux = M.hidden_states(params, cfg, batch)
+    w = M.unembed_weight(params, cfg)
+    nll, cnt = chunked_ce(hidden, w, batch["labels"], opts.ce_chunk)
+    ce = nll / jnp.maximum(cnt, 1.0)
+    loss = ce + opts.aux_weight * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, mesh=None, opts: StepOptions = StepOptions(), total_steps: int = 10_000):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    constraint = None
+    named = None
+    if mesh is not None:
+        from repro.launch.sharding import (
+            make_activation_constraint, make_named_constraint,
+        )
+
+        constraint = make_activation_constraint(
+            mesh, opts.seq_shard_activations, opts.sharding_mode
+        )
+        named = make_named_constraint(mesh, opts.sharding_mode)
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, opts), has_aux=True
+        )(params)
+        if mesh is not None and opts.grad_shard_constraint:
+            from repro.launch.sharding import param_shardings
+
+            grads = jax.lax.with_sharding_constraint(
+                grads, param_shardings(grads, mesh, opts.sharding_mode)
+            )
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        def run():
+            if opts.microbatch and opts.microbatch > 1:
+                mb = opts.microbatch
+                b = batch["tokens"].shape[0]
+                assert b % mb == 0
+
+                def mb_slice(x, i):
+                    return jax.lax.dynamic_slice_in_dim(x, i * (b // mb), b // mb, 0)
+
+                def body(carry, i):
+                    gsum, lsum = carry
+                    sub = {k: mb_slice(v, i) for k, v in batch.items()}
+                    loss, _, grads = compute_grads(params, sub)
+                    gsum = jax.tree.map(jnp.add, gsum, grads)
+                    return (gsum, lsum + loss), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                (gsum, lsum), _ = jax.lax.scan(
+                    body, (zeros, jnp.float32(0)), jnp.arange(mb)
+                )
+                grads = jax.tree.map(lambda g: g / mb, gsum)
+                loss = lsum / mb
+                metrics = {"ce": loss, "aux": jnp.float32(0), "tokens": jnp.float32(0)}
+            else:
+                loss, metrics, grads = compute_grads(params, batch)
+            lr_scale = warmup_cosine(opt_state["step"], total=total_steps)
+            new_params, new_opt, opt_metrics = adamw_update(
+                params, grads, opt_state, opts.adamw, lr_scale
+            )
+            return new_params, new_opt, {"loss": loss, **metrics, **opt_metrics}
+
+        if constraint is not None:
+            with activation_sharding(constraint, named):
+                return run()
+        return run()
+
+    return train_step
+
+
+def init_train_state(cfg, key=None):
+    key = key if key is not None else jax.random.key(0)
+    params = M.init_params(key, cfg)
+    return params, adamw_init(params)
+
+
+def abstract_train_state(cfg):
+    return jax.eval_shape(lambda: init_train_state(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg, mesh=None, opts: StepOptions = StepOptions()):
+    """(params, batch, cache) -> (last logits, filled cache)."""
+    constraint = None
+    named = None
+    if mesh is not None:
+        from repro.launch.sharding import (
+            make_activation_constraint, make_named_constraint,
+        )
+
+        constraint = make_activation_constraint(
+            mesh, opts.seq_shard_activations, opts.sharding_mode
+        )
+        named = make_named_constraint(mesh, opts.sharding_mode)
+
+    def prefill_step(params, batch, cache):
+        def run():
+            return M.prefill(params, cfg, batch, cache)
+
+        if constraint is not None:
+            with activation_sharding(constraint, named):
+                return run()
+        return run()
+
+    return prefill_step
+
+
+def make_decode_step(cfg, mesh=None, opts: StepOptions = StepOptions()):
+    """(params, token, cache, pos) -> (logits, new cache). One new token."""
+
+    def decode_step(params, token, cache, pos):
+        return M.decode_step(params, cfg, token, cache, pos)
+
+    return decode_step

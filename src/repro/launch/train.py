@@ -1,0 +1,173 @@
+"""End-to-end trainer: data pipeline -> sharded train step -> checkpoints,
+under the fault-tolerance supervisor.
+
+Runs for real on however many devices exist (CPU smoke: 1; tests use 8
+fake host devices); the same step/sharding builders are what the 512-chip
+dry-run lowers, so this file doubles as the single-pod launch script.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+      --steps 20 --ckpt-dir /tmp/ckpt --resume auto
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager, latest_step, restore
+from repro.configs.base import get_config
+from repro.data.pipeline import TokenPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import batch_shardings, opt_shardings, param_shardings
+from repro.launch.steps import StepOptions, init_train_state, make_train_step
+from repro.runtime.fault import NonRetryableError, RetryPolicy, Supervisor, guard_finite
+
+
+def build(cfg, mesh, opts: StepOptions, total_steps: int):
+    params, opt = init_train_state(cfg)
+    p_sh = param_shardings(params, mesh)
+    o_sh = opt_shardings(opt, p_sh, mesh)
+    with mesh:
+        params = jax.device_put(params, p_sh)
+        opt = jax.device_put(opt, o_sh)
+    step = make_train_step(cfg, mesh, opts, total_steps=total_steps)
+    jitted = jax.jit(step, in_shardings=(p_sh, o_sh, None), out_shardings=(p_sh, o_sh, None))
+    return params, opt, jitted, (p_sh, o_sh)
+
+
+def add_stub_inputs(batch, cfg, rng):
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((batch["tokens"].shape[0], cfg.encoder_seq, cfg.d_model), np.float32)
+        )
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((batch["tokens"].shape[0], cfg.num_patches, cfg.d_model), np.float32)
+        )
+    return batch
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="none", choices=["none", "auto"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ce-chunk", type=int, default=64)
+    ap.add_argument("--fail-at-step", type=int, default=-1,
+                    help="inject one failure at this step (fault-tolerance test)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh(args.data_par, args.model_par)
+    opts = StepOptions(ce_chunk=min(args.ce_chunk, args.seq_len))
+
+    params, opt, jitted, (p_sh, o_sh) = build(cfg, mesh, opts, args.steps)
+    state = {"params": params, "opt": opt}
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+    start = 0
+    if mgr and args.resume == "auto":
+        s = latest_step(args.ckpt_dir)
+        if s is not None:
+            with mesh:
+                like = {"params": params, "opt": opt}
+                restored, extra = restore(
+                    args.ckpt_dir, s, like,
+                    shard_fn=lambda path, v: jax.device_put(v),
+                )
+            state = restored
+            start = s
+            print(f"resumed from step {s}", flush=True)
+
+    pipe = TokenPipeline(
+        args.seed, args.global_batch, args.seq_len, cfg.vocab_size, start_step=start
+    )
+    rng = np.random.default_rng(123)
+    injected = {"done": start > 0}
+    history = []
+
+    def step_fn(i):
+        if args.fail_at_step == i and not injected["done"]:
+            injected["done"] = True
+            raise RuntimeError("injected node failure")
+        batch = next(pipe)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        batch = add_stub_inputs(batch, cfg, rng)
+        with mesh:
+            state["params"], state["opt"], metrics = jitted(
+                state["params"], state["opt"], batch
+            )
+        if i % args.log_every == 0 or i == args.steps - 1:
+            guard_finite("loss", metrics["loss"])
+        if mgr and (i + 1) % args.ckpt_every == 0:
+            mgr.save_async(i + 1, {"params": state["params"], "opt": state["opt"]},
+                           extra={"step": i + 1})
+        return metrics
+
+    def restore_fn(reason):
+        print(f"RESTORE after: {reason}", flush=True)
+        if not mgr:
+            return 0
+        mgr.wait()
+        s = latest_step(args.ckpt_dir) or 0
+        if s:
+            like = {"params": state["params"], "opt": state["opt"]}
+            restored, _ = restore(args.ckpt_dir, s, like,
+                                  shard_fn=lambda path, v: jax.device_put(v))
+            state.update(restored)
+        pipe.step = s
+        # drain the prefetch queue so batches realign with the restored step
+        pipe.close()
+        new_pipe = TokenPipeline(
+            args.seed, args.global_batch, args.seq_len, cfg.vocab_size, start_step=s
+        )
+        nonlocal_pipe(new_pipe)
+        return s
+
+    def nonlocal_pipe(p):
+        nonlocal pipe
+        pipe = p
+
+    def on_metrics(i, metrics):
+        if i % args.log_every == 0 or i == args.steps - 1:
+            loss = float(metrics["loss"])
+            history.append((i, loss))
+            print(f"step {i:5d} loss {loss:.4f} gnorm {float(metrics['grad_norm']):.3f}",
+                  flush=True)
+
+    sup = Supervisor(step_fn, restore_fn, RetryPolicy(max_retries=3, backoff_s=0.1),
+                     on_metrics=on_metrics)
+    t0 = time.time()
+    sup.run(start, args.steps)
+    dt = time.time() - t0
+    if mgr:
+        mgr.save_sync(args.steps, {"params": state["params"], "opt": state["opt"]},
+                      extra={"step": args.steps})
+    tok_s = args.global_batch * args.seq_len * (args.steps - start) / max(dt, 1e-9)
+    print(json.dumps({
+        "arch": cfg.name, "steps": args.steps, "wall_s": round(dt, 2),
+        "tokens_per_s": round(tok_s, 1), "failures": sup.failures,
+        "final_loss": history[-1][1] if history else None,
+    }), flush=True)
+    pipe.close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

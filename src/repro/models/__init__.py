@@ -1,0 +1,15 @@
+"""Model zoo: dense / MoE / RWKV6 / RG-LRU hybrid / enc-dec / VLM backbones."""
+from repro.models.model import (
+    abstract_params,
+    decode_step,
+    forward,
+    init_params,
+    loss_fn,
+    make_serve_cache,
+    prefill,
+)
+
+__all__ = [
+    "init_params", "abstract_params", "forward", "loss_fn",
+    "make_serve_cache", "prefill", "decode_step",
+]

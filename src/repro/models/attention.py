@@ -1,0 +1,251 @@
+"""Attention: GQA / MQA / MHA with RoPE, qk-norm, bias, causal / local /
+cross / bidirectional masking, and KV-cache prefill & decode paths.
+
+Shapes:
+  x        (B, S, d)
+  q        (B, S, H, hd);  k, v (B, T, KVH, hd) with H = G·KVH
+  cache    {"k": (B, S_max, KVH, hd), "v": ..., } + integer position
+
+Decode (S == 1) scores against the full cache with a position mask —
+O(S_max) per step, the standard TPU serving layout (cache stationary in
+HBM, heads sharded over the model axis).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init, rope
+
+NEG = -1e30
+
+
+def attn_init(key, cfg, cross: bool = False):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], (d, h * hd)),
+        "w_k": dense_init(ks[1], (d, kvh * hd)),
+        "w_v": dense_init(ks[2], (d, kvh * hd)),
+        "w_o": dense_init(ks[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h * hd,), jnp.float32)
+        p["b_k"] = jnp.zeros((kvh * hd,), jnp.float32)
+        p["b_v"] = jnp.zeros((kvh * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    if cross:
+        p["gate"] = jnp.zeros((), jnp.float32)  # llama-3.2-vision tanh gate
+    return p
+
+
+def _project_qkv(p, cfg, x, kv_x):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    q = x @ p["w_q"].astype(x.dtype)
+    k = kv_x @ p["w_k"].astype(x.dtype)
+    v = kv_x @ p["w_v"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["b_q"].astype(x.dtype)
+        k = k + p["b_k"].astype(x.dtype)
+        v = v + p["b_v"].astype(x.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, kv_x.shape[1], kvh, hd)
+    v = v.reshape(b, kv_x.shape[1], kvh, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask: Optional[jax.Array]) -> jax.Array:
+    """q (B,S,H,hd), k/v (B,T,KVH,hd); mask broadcastable to (B,H,S,T)."""
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        # mask: (B|1, H|1, s, t) -> insert the GQA group axis
+        scores = jnp.where(mask[:, :, None], scores, NEG)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _causal_mask(s: int, t: int, q_offset, window: int = 0):
+    """(1, 1, s, t) bool; window > 0 = local attention."""
+    qpos = q_offset + jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    m = kpos <= qpos
+    if window:
+        m = m & (kpos > qpos - window)
+    return m[None, None]
+
+
+CHUNKED_ATTN_MIN_SEQ = 8192  # default; per-arch override via cfg.chunked_attn_min_seq
+
+
+def _sdpa_chunked(q, k, v, window: int = 0, causal: bool = True,
+                  chunk: int = 0):
+    """Query-chunked causal attention: O(chunk·T) peak score memory.
+
+    The pure-JAX materialization of the flash-attention blocking idea
+    (kernels/flash_attn is the VMEM-fused TPU version): a 32k×32k score
+    matrix (21.5 GB/device at prefill_32k) never exists — each lax.scan
+    step computes one (chunk, T) stripe, softmaxes it exactly (full kv
+    visible per row; no online rescaling needed) and discards it.
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    # default chunk: 1/2 of seq at 4-8k (footprint halves, one extra kv
+    # gather), 1/16+ above (32k prefill stripes)
+    chunk = chunk or max(512, min(2048, s // 2))
+    chunk = min(chunk, s)
+    if s % chunk:
+        return _sdpa(q, k, v, _causal_mask(s, t, 0, window) if causal else None)
+    n = s // chunk
+    qc = q.reshape(b, n, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, xs):
+        qi, i = xs
+        if causal:
+            m = _causal_mask(chunk, t, i * chunk, window)
+        else:
+            m = None
+        return None, _sdpa(qi, k, v, m)
+
+    body = jax.checkpoint(body)
+    _, out = jax.lax.scan(body, None, (qc, jnp.arange(n)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def _full_seq_sdpa(q, k, v, window: int, mode: str, min_seq: int = 0):
+    """Full-sequence self-attention; query-chunked above the size cutoff."""
+    s = q.shape[1]
+    causal = mode != "full"
+    if s >= (min_seq or CHUNKED_ATTN_MIN_SEQ):
+        return _sdpa_chunked(q, k, v, window=window, causal=causal)
+    if causal:
+        return _sdpa(q, k, v, _causal_mask(s, s, 0, window))
+    return _sdpa(q, k, v, None)
+
+
+def self_attention(
+    p,
+    cfg,
+    x: jax.Array,
+    positions: jax.Array,
+    mode: str = "causal",            # causal | local | full
+    cache: Optional[dict] = None,    # decode/prefill KV cache
+    cache_pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, cfg, x, x)
+    if not cfg.learned_pos:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    window = cfg.local_window if mode == "local" else (cfg.sliding_window or 0)
+    new_cache = None
+    if cache is not None and "slot_pos" in cache:
+        # rolling-window cache (local attention): O(window) memory & decode
+        # FLOPs regardless of context length.  Keys carry RoPE at absolute
+        # positions; slot_pos[w] records which absolute position each slot
+        # holds (-1 = empty), so masking survives wrap-around.
+        w = cache["k"].shape[1]
+        if s == 1:
+            slot = cache_pos % w
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+            sp = cache["slot_pos"].at[slot].set(cache_pos)
+            wnd = window or w
+            m = (sp >= 0) & (sp <= cache_pos) & (sp > cache_pos - wnd)
+            out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), m[None, None, None, :])
+            new_cache = {"k": ck, "v": cv, "slot_pos": sp}
+        else:
+            out = _full_seq_sdpa(q, k, v, window, mode,
+                                 getattr(cfg, "chunked_attn_min_seq", 0))
+            keep = min(w, s)
+            pos_kept = jnp.arange(s - keep, s)
+            slots = pos_kept % w
+            ck = cache["k"].at[:, slots].set(k[:, -keep:].astype(cache["k"].dtype))
+            cv = cache["v"].at[:, slots].set(v[:, -keep:].astype(cache["v"].dtype))
+            sp = cache["slot_pos"].at[slots].set(pos_kept)
+            new_cache = {"k": ck, "v": cv, "slot_pos": sp}
+    elif cache is not None:
+        if s == 1:  # decode: append to cache, score against everything so far
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_pos, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_pos, 1)
+            t = ck.shape[1]
+            kpos = jnp.arange(t)[None, :]
+            m = kpos <= cache_pos
+            if window:
+                m = m & (kpos > cache_pos - window)
+            out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), m[None, None])
+            new_cache = {"k": ck, "v": cv}
+        else:       # prefill: causal over the fresh keys, then store
+            out = _full_seq_sdpa(q, k, v, window, mode,
+                                 getattr(cfg, "chunked_attn_min_seq", 0))
+            ck = jnp.zeros_like(cache["k"]).at[:, :s].set(k.astype(cache["k"].dtype))
+            cv = jnp.zeros_like(cache["v"]).at[:, :s].set(v.astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+    else:
+        out = _full_seq_sdpa(q, k, v, window, mode,
+                             getattr(cfg, "chunked_attn_min_seq", 0))
+
+    y = out.reshape(b, s, h * hd) @ p["w_o"].astype(x.dtype)
+    return y, new_cache
+
+
+def cross_attention(
+    p,
+    cfg,
+    x: jax.Array,
+    kv: jax.Array | dict,
+    gated: bool = False,
+) -> jax.Array:
+    """x (B,S,d) attends to kv (B,T,d) (stub frame/patch embeddings), or to a
+    precomputed {"k","v"} cross cache."""
+    b, s, _ = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    if isinstance(kv, dict):
+        q = x @ p["w_q"].astype(x.dtype)
+        if cfg.qkv_bias:
+            q = q + p["b_q"].astype(x.dtype)
+        q = q.reshape(b, s, h, hd)
+        if cfg.qk_norm:
+            q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k, v = kv["k"].astype(x.dtype), kv["v"].astype(x.dtype)
+    else:
+        q, k, v = _project_qkv(p, cfg, x, kv)
+    out = _sdpa(q, k, v, None)
+    y = out.reshape(b, s, h * hd) @ p["w_o"].astype(x.dtype)
+    if gated:
+        y = jnp.tanh(p["gate"]).astype(x.dtype) * y
+    return y
+
+
+def cross_kv(p, cfg, kv_x: jax.Array) -> dict:
+    """Precompute cross-attention K/V once per request (prefill-time)."""
+    b, t, _ = kv_x.shape
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = (kv_x @ p["w_k"].astype(kv_x.dtype))
+    v = (kv_x @ p["w_v"].astype(kv_x.dtype))
+    if cfg.qkv_bias:
+        k = k + p["b_k"].astype(kv_x.dtype)
+        v = v + p["b_v"].astype(kv_x.dtype)
+    k = k.reshape(b, t, kvh, hd)
+    v = v.reshape(b, t, kvh, hd)
+    if cfg.qk_norm:
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return {"k": k, "v": v}

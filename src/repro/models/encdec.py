@@ -1,0 +1,106 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed per spec).
+
+Encoder: precomputed frame embeddings (B, T_enc, d) — the stub replaces
+the two-conv mel frontend — plus fixed sinusoidal positions, then
+bidirectional pre-LN transformer layers (GELU MLPs).
+
+Decoder: learned positional embeddings, causal self-attention + cross
+attention onto the encoder output.  Serving keeps a self-KV cache and a
+cross-KV cache precomputed once per request (``cross_kv``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_init, cross_attention, cross_kv, self_attention
+from repro.models.layers import (
+    gelu_mlp,
+    gelu_mlp_init,
+    layernorm,
+    layernorm_init,
+    sinusoidal_pos,
+)
+from repro.models.shardctx import constrain
+from repro.models.transformer import _maybe_remat, _stack_init
+
+
+def enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layernorm_init(cfg.d_model),
+        "attn": attn_init(k1, cfg),
+        "ln2": layernorm_init(cfg.d_model),
+        "mlp": gelu_mlp_init(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layernorm_init(cfg.d_model),
+        "self": attn_init(k1, cfg),
+        "ln2": layernorm_init(cfg.d_model),
+        "cross": attn_init(k2, cfg, cross=True),
+        "ln3": layernorm_init(cfg.d_model),
+        "mlp": gelu_mlp_init(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def encdec_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "encoder": _stack_init(lambda k: enc_layer_init(k, cfg), k1, cfg.num_encoder_layers),
+        "enc_ln": layernorm_init(cfg.d_model),
+        "decoder": _stack_init(lambda k: dec_layer_init(k, cfg), k2, cfg.num_layers),
+    }
+
+
+def encode(params, cfg, frames: jax.Array) -> jax.Array:
+    """frames: (B, T_enc, d) stub embeddings -> encoder output (B, T_enc, d)."""
+    x = frames + sinusoidal_pos(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+    def body(x, p):
+        x = constrain(x)
+        h, _ = self_attention(p["attn"], cfg, layernorm(p["ln1"], x, cfg.norm_eps),
+                              jnp.arange(x.shape[1]), mode="full")
+        x = x + h
+        x = x + gelu_mlp(p["mlp"], layernorm(p["ln2"], x, cfg.norm_eps))
+        return constrain(x), None
+
+    body = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return layernorm(params["enc_ln"], x, cfg.norm_eps)
+
+
+def decode_stack(
+    params, cfg, x: jax.Array, positions,
+    enc_out: Optional[jax.Array] = None,       # training/prefill path
+    cross_caches=None,                          # decode path: stacked {"k","v"}
+    self_caches=None,
+    cache_pos=None,
+):
+    def body(carry, xs):
+        x = carry
+        p, self_c, cross_c = xs
+        x = constrain(x)
+        h, new_self = self_attention(
+            p["self"], cfg, layernorm(p["ln1"], x, cfg.norm_eps), positions,
+            cache=self_c, cache_pos=cache_pos,
+        )
+        x = x + h
+        kv = cross_c if cross_c is not None else enc_out
+        x = x + cross_attention(p["cross"], cfg, layernorm(p["ln2"], x, cfg.norm_eps), kv)
+        x = x + gelu_mlp(p["mlp"], layernorm(p["ln3"], x, cfg.norm_eps))
+        return constrain(x), new_self
+
+    body = _maybe_remat(body, cfg)
+    x, new_self_caches = jax.lax.scan(body, x, (params["decoder"], self_caches, cross_caches))
+    return x, new_self_caches
+
+
+def decoder_cross_kv(params, cfg, enc_out: jax.Array):
+    """Precompute per-decoder-layer cross K/V (stacked) from encoder output."""
+    return jax.vmap(lambda p: cross_kv(p["cross"], cfg, enc_out))(params["decoder"])

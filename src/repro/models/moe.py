@@ -1,0 +1,90 @@
+"""Mixture-of-Experts layer with einsum (dispatch-tensor) routing.
+
+Routing IS a KNN join (DESIGN.md §4): every token's activation joins
+against the expert centroid rows of the router matrix under dot-product
+similarity with k = num_experts_per_tok — R = tokens, S = router rows.
+We use ``jax.lax.top_k`` here (identical semantics to core.topk on a
+single block; the equivalence is asserted in tests/test_models.py).
+
+Dispatch uses the Mesh-TensorFlow/Switch dispatch-einsum formulation with
+the K axis collapsed *before* the capacity one-hot: the (Tg, E) assignment
+and gate matrices are built first, then a single (Tg, E, C) dispatch
+tensor — peak memory O(Tg·E·C) per group instead of O(Tg·K·E·C).  Tokens
+are cut into groups of ``moe_group_size``; all compute is einsums, so
+GSPMD shards it cleanly with experts on the ``model`` axis (EP) and
+groups on ``data``.  Tokens over capacity C are dropped (standard),
+controlled by capacity_factor.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.shardctx import constrain_named
+
+
+def moe_init(key, cfg):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), scale=0.02),
+        "w_gate": dense_init(ks[1], (e, d, ff)),
+        "w_up": dense_init(ks[2], (e, d, ff)),
+        "w_down": dense_init(ks[3], (e, ff, d)),
+    }
+
+
+def moe_ffn(p, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss). Top-k routing + capacity dispatch."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    t = b * s
+    tg = min(cfg.moe_group_size, t)
+    while t % tg:           # largest group size <= the config that divides t
+        tg -= 1
+    g = t // tg
+    cap = max(int(tg * k / e * cfg.capacity_factor), 1)
+
+    xf = x.reshape(g, tg, d)
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # --- the KNN-join step: top-k experts per token -----------------------
+    top_p, top_e = jax.lax.top_k(probs, k)                 # (G, Tg, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # collapse K before the capacity one-hot: (G, Tg, E) assignment + gates
+    sel_k = jax.nn.one_hot(top_e, e, dtype=jnp.float32)    # (G, Tg, K, E)
+    assign = sel_k.sum(axis=2)                             # (G, Tg, E) ∈ {0,1}
+    gates = jnp.einsum("gtke,gtk->gte", sel_k, top_p)      # (G, Tg, E)
+
+    # position within each expert's buffer (token-major priority)
+    pos = jnp.cumsum(assign, axis=1) - assign              # (G, Tg, E)
+    keep = (pos < cap) & (assign > 0)
+    pos = jnp.where(keep, pos, 0).astype(jnp.int32)
+    # dispatch: (G, Tg, E, C) — the only O(Tg·E·C) tensor.  Its E axis is
+    # pinned to the EP shards (constrain_named) so dispatch/expert compute
+    # stays local and only the combine output is psum-ed.
+    dispatch = jax.nn.one_hot(pos, cap, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    dispatch = constrain_named(dispatch, "moe_dispatch")
+    combine = dispatch * gates[..., None].astype(x.dtype)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xf)        # (G, E, C, d)
+    xe = constrain_named(xe, "moe_expert")
+    h_g = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(x.dtype))
+    h_u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(h_g) * h_u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    ye = constrain_named(ye, "moe_expert")
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)
+    y = constrain_named(y, "moe_out")
+
+    # load-balance auxiliary loss (Switch): E * Σ_e f_e · P_e
+    frac_tokens = jnp.mean(assign, axis=(0, 1)) / k        # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs) * k
+
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Elementwise diagonal recurrence:
+
+    a_t = exp(c · r_t · log σ(Λ))          (r_t = σ(W_a x_t), c = 8)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Being diagonal-affine, train/prefill evaluate it with
+``jax.lax.associative_scan`` (log-depth on the sequence, TPU-friendly);
+decode is the exact one-step update.  The full recurrent block is
+Griffin's: (norm →) {linear branch, gate branch} → short conv1d → RG-LRU →
+⊙ GeLU(gate) → linear out.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+C_EXP = 8.0
+
+
+def rglru_block_init(key, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (d, w)),
+        "w_gate": dense_init(ks[1], (d, w)),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), scale=0.1),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "lru_lambda": jnp.linspace(2.0, 5.0, w).astype(jnp.float32),  # σ(Λ) ∈ (.88,.99)
+        "lru_wa": dense_init(ks[3], (w, w), scale=0.01),
+        "lru_ba": jnp.zeros((w,), jnp.float32),
+        "lru_wi": dense_init(ks[4], (w, w), scale=0.01),
+        "lru_bi": jnp.zeros((w,), jnp.float32),
+        "w_out": dense_init(ks[5], (w, d)),
+    }
+
+
+def _conv1d(p, x: jax.Array, state: Optional[jax.Array]):
+    """Causal depthwise conv, width cw. x (B,T,W). state: (B, cw-1, W) history."""
+    cw = p["conv_w"].shape[0]
+    if state is None:
+        hist = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        hist = state.astype(x.dtype)
+    xx = jnp.concatenate([hist, x], axis=1)
+    out = sum(
+        xx[:, i : i + x.shape[1]] * p["conv_w"][i].astype(x.dtype) for i in range(cw)
+    ) + p["conv_b"].astype(x.dtype)
+    new_state = xx[:, -(cw - 1) :] if cw > 1 else hist
+    return out, new_state
+
+
+def _rglru(p, x: jax.Array, h0: Optional[jax.Array]):
+    """x (B,T,W) -> (out, h_last). Associative scan over T (f32 state)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["lru_wa"] + p["lru_ba"])
+    i = jax.nn.sigmoid(xf @ p["lru_wi"] + p["lru_bi"])
+    log_a = C_EXP * r * jax.nn.log_sigmoid(p["lru_lambda"])       # ≤ 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+
+    if x.shape[1] == 1 and h0 is not None:                        # decode
+        h = a[:, 0] * h0 + gated[:, 0]
+        return h[:, None].astype(x.dtype), h
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+    aa, hh = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rglru_block(
+    p, cfg, x: jax.Array,
+    state: Optional[dict] = None,   # {"conv": (B,cw-1,W), "h": (B,W)}
+) -> Tuple[jax.Array, Optional[dict]]:
+    branch = x @ p["w_x"].astype(x.dtype)
+    gate = x @ p["w_gate"].astype(x.dtype)
+    conv_state = state["conv"] if state is not None else None
+    h0 = state["h"] if state is not None else None
+    branch, new_conv = _conv1d(p, branch, conv_state)
+    rec, h_last = _rglru(p, branch, h0)
+    out = (rec * jax.nn.gelu(gate)) @ p["w_out"].astype(x.dtype)
+    new_state = {"conv": new_conv, "h": h_last} if state is not None else None
+    return out, new_state
+
+
+def rglru_init_state(cfg, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

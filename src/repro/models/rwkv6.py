@@ -1,0 +1,215 @@
+"""RWKV6 "Finch" — attention-free time mixing with data-dependent decay.
+
+Recurrence per head (state S ∈ R^{K×V}, per-channel decay w_t ∈ (0,1)^K):
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    o_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+
+Training/prefill use the **chunked linear-attention form** (the standard
+TPU-friendly GLA/RWKV6 evaluation): within a chunk of C tokens the
+pairwise decay products exp(L_t − L_τ) (τ ≤ t, so the exponent is ≤ 0 —
+numerically safe) are applied via an O(C²) masked matmul per head-channel
+*factorized* as (r ⊙ e^{L−L₀}) @ (k ⊙ e^{L₀−L})ᵀ with the inverse factor
+clamped (contributions needing > e^{CLAMP} relative decay range are ≤
+e^{-CLAMP} ≈ 0; see tests for the tolerance this induces).  Between
+chunks the state carries with the diagonal-affine composition — a scan of
+length T/C instead of T.
+
+Decode is the exact one-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+CLAMP = 30.0  # max |log| of the intra-chunk inverse decay factor
+
+
+def rwkv_layer_init(key, cfg):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    ks = jax.random.split(key, 12)
+    lora = max(32, d // 16)
+    return {
+        "ln_t": rmsnorm_init(d),
+        "ln_c": rmsnorm_init(d),
+        # time-mix token-shift interpolation factors
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "w_r": dense_init(ks[0], (d, d)),
+        "w_k": dense_init(ks[1], (d, d)),
+        "w_v": dense_init(ks[2], (d, d)),
+        "w_g": dense_init(ks[3], (d, d)),
+        "w_o": dense_init(ks[4], (d, d)),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": jnp.full((d,), -6.0, jnp.float32),
+        "decay_a": dense_init(ks[5], (d, lora), scale=0.01),
+        "decay_b": dense_init(ks[6], (lora, d), scale=0.01),
+        "bonus_u": jnp.zeros((h, hs), jnp.float32),
+        "ln_x": rmsnorm_init(d),
+        # channel mix
+        "cmu_r": jnp.full((d,), 0.5, jnp.float32),
+        "cmu_k": jnp.full((d,), 0.5, jnp.float32),
+        "cw_r": dense_init(ks[7], (d, d)),
+        "cw_k": dense_init(ks[8], (d, cfg.d_ff)),
+        "cw_v": dense_init(ks[9], (cfg.d_ff, d)),
+    }
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]) -> jax.Array:
+    """x shifted right by one along time; position 0 filled with `last`
+    (zeros at sequence start, the previous token in decode)."""
+    if x.shape[1] == 1:
+        return last[:, None] if last is not None else jnp.zeros_like(x)
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _chunked_wkv(r, k, v, logw, u, chunk: int):
+    """Chunked RWKV6 core.  r,k,v: (B,T,H,K); logw: (B,T,H,K) (≤0); u: (H,K).
+    Returns (B,T,H,K) outputs. T % chunk == 0 (caller pads)."""
+    b, t, h, kk = r.shape
+    n = t // chunk
+    rc = r.reshape(b, n, chunk, h, kk)
+    kc = k.reshape(b, n, chunk, h, kk)
+    vc = v.reshape(b, n, chunk, h, kk)
+    lw = logw.reshape(b, n, chunk, h, kk).astype(jnp.float32)
+
+    # cumulative log decay within chunk, EXCLUSIVE of the current token:
+    # state before token i has decayed by Σ_{τ<i} logw_τ since chunk start
+    lcum = jnp.cumsum(lw, axis=2) - lw            # (B,N,C,H,K), ≤ 0, first row 0
+    ltot = jnp.sum(lw, axis=2)                    # (B,N,H,K)
+
+    # intra-chunk pairwise: o_i += Σ_{τ<i} r_i e^{lcum_i - lcum_τ - lw_τ?}...
+    # Decay from just-after-τ to just-before-i is Σ_{τ<σ<i} lw_σ = lcum_i - lcum_τ - lw_τ.
+    ri = rc * jnp.exp(lcum).astype(rc.dtype)                       # r_i e^{lcum_i}
+    kj = kc * jnp.exp(jnp.clip(-(lcum + lw), -CLAMP, CLAMP)).astype(kc.dtype)
+    scores = jnp.einsum("bnihk,bnjhk->bnhij", ri.astype(jnp.float32), kj.astype(jnp.float32))
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)          # strictly past
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    # bonus diagonal: current token contributes via u
+    diag = jnp.einsum("bnihk,bnihk->bnih", rc.astype(jnp.float32),
+                      (kc * u.astype(kc.dtype)).astype(jnp.float32))
+    intra = jnp.einsum("bnhij,bnjhk->bnihk", scores, vc.astype(jnp.float32))
+    intra = intra + diag[..., None] * vc.astype(jnp.float32)
+
+    # inter-chunk: carry state S (B,H,K,K) across chunks
+    # contribution of chunk n to token i of chunk n+1: r_i e^{lcum_i} · S
+    k_carry = kc * jnp.exp(jnp.clip(ltot[:, :, None] - (lcum + lw), None, CLAMP)).astype(kc.dtype)
+
+    def step(s, inp):
+        ri_n, kcar_n, vc_n, ltot_n = inp
+        out = jnp.einsum("bihk,bhkv->bihv", ri_n.astype(jnp.float32), s)
+        s_new = s * jnp.exp(ltot_n)[..., None] + jnp.einsum(
+            "bihk,bihv->bhkv", kcar_n.astype(jnp.float32), vc_n.astype(jnp.float32)
+        )
+        return s_new, out
+
+    s0 = jnp.zeros((b, h, kk, kk), jnp.float32)
+    xs = (
+        jnp.moveaxis(ri, 1, 0),
+        jnp.moveaxis(k_carry, 1, 0),
+        jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(ltot, 1, 0),
+    )
+    _, inter = jax.lax.scan(step, s0, xs)
+    inter = jnp.moveaxis(inter, 0, 1)             # (B,N,C,H,K)
+
+    out = (intra + inter).reshape(b, t, h, kk)
+    return out.astype(r.dtype)
+
+
+def time_mix(
+    p, cfg, x: jax.Array,
+    state: Optional[dict] = None,     # decode: {"last": (B,d), "s": (B,H,K,K)}
+) -> Tuple[jax.Array, Optional[dict]]:
+    b, t, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    last = state["last_t"] if state is not None else None
+    xx = _token_shift(x, last)
+    xr = _mix(x, xx, p["mu_r"]) @ p["w_r"].astype(x.dtype)
+    xk = _mix(x, xx, p["mu_k"]) @ p["w_k"].astype(x.dtype)
+    xv = _mix(x, xx, p["mu_v"]) @ p["w_v"].astype(x.dtype)
+    xg = _mix(x, xx, p["mu_g"]) @ p["w_g"].astype(x.dtype)
+    xw = _mix(x, xx, p["mu_w"])
+    logw = -jnp.exp(
+        p["decay_w0"].astype(jnp.float32)
+        + (jnp.tanh(xw.astype(jnp.float32) @ p["decay_a"]) @ p["decay_b"])
+    )                                              # (B,T,d) ≤ 0
+
+    r = xr.reshape(b, t, h, hs)
+    k = xk.reshape(b, t, h, hs)
+    v = xv.reshape(b, t, h, hs)
+    lw = logw.reshape(b, t, h, hs)
+    u = p["bonus_u"]
+
+    new_state = None
+    if state is not None and t == 1:               # exact decode recurrence
+        s = state["s"]                             # (B,H,K,V) f32
+        r1, k1, v1 = r[:, 0], k[:, 0], v[:, 0]
+        lw1 = lw[:, 0].astype(jnp.float32)
+        kv = jnp.einsum("bhk,bhv->bhkv", k1.astype(jnp.float32), v1.astype(jnp.float32))
+        out = jnp.einsum("bhk,bhkv->bhv", r1.astype(jnp.float32), s + u[None, :, :, None] * kv)
+        s = s * jnp.exp(lw1)[..., None] + kv
+        o = out[:, None].reshape(b, 1, d).astype(x.dtype)
+        new_state = {"s": s, "last_t": x[:, -1]}
+    else:                                          # chunked parallel form
+        chunk = cfg.rwkv_chunk
+        pad = (-t) % chunk
+        if pad:
+            z = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+            r, k, v, lw = z(r), z(k), z(v), z(lw)
+        o = _chunked_wkv(r, k, v, lw, u, chunk)[:, :t].reshape(b, t, d)
+        if state is not None:
+            raise NotImplementedError("prefill->state handoff uses decode path")
+
+    o = rmsnorm(p["ln_x"], o, cfg.norm_eps)
+    o = o * jax.nn.silu(xg)
+    return o @ p["w_o"].astype(x.dtype), new_state
+
+
+def channel_mix(p, cfg, x: jax.Array, state: Optional[dict] = None):
+    last = state["last_c"] if state is not None else None
+    xx = _token_shift(x, last)
+    xr = _mix(x, xx, p["cmu_r"])
+    xk = _mix(x, xx, p["cmu_k"])
+    rgate = jax.nn.sigmoid(xr @ p["cw_r"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(xk @ p["cw_k"].astype(x.dtype)))
+    out = rgate * (kk @ p["cw_v"].astype(x.dtype))
+    new_state = {"last_c": x[:, -1]} if state is not None else None
+    return out, new_state
+
+
+def rwkv_layer(p, cfg, x, state: Optional[dict] = None):
+    h, st_t = time_mix(p, cfg, rmsnorm(p["ln_t"], x, cfg.norm_eps), state)
+    x = x + h
+    h, st_c = channel_mix(p, cfg, rmsnorm(p["ln_c"], x, cfg.norm_eps), state)
+    x = x + h
+    new_state = None
+    if state is not None:
+        new_state = {**(st_t or {}), **(st_c or {})}
+    return x, new_state
+
+
+def rwkv_init_state(cfg, batch: int):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    return {
+        "s": jnp.zeros((batch, h, hs, hs), jnp.float32),
+        "last_t": jnp.zeros((batch, d), jnp.dtype(cfg.dtype)),
+        "last_c": jnp.zeros((batch, d), jnp.dtype(cfg.dtype)),
+    }

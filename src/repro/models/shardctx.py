@@ -1,0 +1,41 @@
+"""Activation-sharding context.
+
+Model code stays mesh-agnostic; the launcher installs a constraint
+function (e.g. Megatron-style sequence parallelism: residual stream
+sharded over the ``model`` axis between blocks) for the duration of a
+trace.  ``constrain`` is called by the layer stacks on the residual
+carry; with no context installed it is the identity, so tests and
+single-device paths are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Optional
+
+import jax
+
+_CONSTRAIN: Optional[Callable[[jax.Array], jax.Array]] = None
+_NAMED: Optional[Callable[[jax.Array, str], jax.Array]] = None
+
+
+def constrain(x: jax.Array) -> jax.Array:
+    return x if _CONSTRAIN is None else _CONSTRAIN(x)
+
+
+def constrain_named(x: jax.Array, kind: str) -> jax.Array:
+    """Named constraint point (e.g. MoE dispatch/expert tensors)."""
+    return x if _NAMED is None else _NAMED(x, kind)
+
+
+@contextlib.contextmanager
+def activation_sharding(
+    fn: Callable[[jax.Array], jax.Array],
+    named: Optional[Callable[[jax.Array, str], jax.Array]] = None,
+):
+    global _CONSTRAIN, _NAMED
+    prev, prev_named = _CONSTRAIN, _NAMED
+    _CONSTRAIN, _NAMED = fn, named
+    try:
+        yield
+    finally:
+        _CONSTRAIN, _NAMED = prev, prev_named

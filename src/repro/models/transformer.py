@@ -1,0 +1,332 @@
+"""Layer stacks for all decoder families, built for `lax.scan`.
+
+Every family stacks its per-layer parameters along a leading axis and
+scans — the HLO stays O(1) in depth (fast 512-device AOT compiles) and
+the unit boundary is the natural pipeline-stage cut.  Heterogeneous
+patterns scan over *pattern units*:
+
+  dense / moe : unit = 1 layer,    scan over L
+  vlm         : unit = (cross_attn_every-1) self layers + 1 cross layer
+  hybrid      : unit = block_pattern (e.g. rglru, rglru, attn), plus an
+                explicitly-stacked tail for L % |pattern|
+  ssm (rwkv6) : unit = 1 rwkv layer, scan over L
+
+Caches mirror the unit structure ((U, ...) stacked leaves).  Local
+attention (hybrid) uses a rolling window cache with an absolute-position
+slot array, so decode is O(window) regardless of context length — this is
+what makes `long_500k` sub-quadratic for recurrentgemma; rwkv6 carries
+O(1) state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_init, cross_attention, cross_kv, self_attention
+from repro.models.layers import rmsnorm, rmsnorm_init, swiglu, swiglu_init
+from repro.models.moe import moe_ffn, moe_init
+from repro.models.rglru import rglru_block, rglru_block_init, rglru_init_state
+from repro.models.rwkv6 import rwkv_init_state, rwkv_layer, rwkv_layer_init
+from repro.models.shardctx import constrain
+
+
+def _maybe_remat(fn, cfg):
+    if not cfg.remat:
+        return fn
+    if getattr(cfg, "remat_policy", "full") == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _stack_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# single decoder layer (dense / moe / + optional cross)
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg, cross: bool = False, moe: bool = False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "attn": attn_init(k1, cfg, cross=cross),
+        "ln2": rmsnorm_init(cfg.d_model),
+    }
+    p["mlp"] = moe_init(k2, cfg) if moe else swiglu_init(k3, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def layer_apply(
+    p, cfg, x, positions, *, moe: bool, mode: str = "causal",
+    cache=None, cache_pos=None,
+):
+    h, new_cache = self_attention(
+        p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps), positions,
+        mode=mode, cache=cache, cache_pos=cache_pos,
+    )
+    x = x + h
+    if moe:
+        h, aux = moe_ffn(p["mlp"], cfg, rmsnorm(p["ln2"], x, cfg.norm_eps))
+    else:
+        h, aux = swiglu(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps)), jnp.float32(0)
+    return x + h, new_cache, aux
+
+
+def cross_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "attn": attn_init(k1, cfg, cross=True),
+        "ln2": rmsnorm_init(cfg.d_model),
+        "mlp": swiglu_init(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def cross_layer_apply(p, cfg, x, kv):
+    h = cross_attention(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps), kv, gated=True)
+    x = x + h
+    return x + swiglu(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+
+
+# ---------------------------------------------------------------------------
+# dense / moe stack
+# ---------------------------------------------------------------------------
+
+def dense_stack_init(key, cfg):
+    moe = cfg.family == "moe"
+    return _stack_init(lambda k: layer_init(k, cfg, moe=moe), key, cfg.num_layers)
+
+
+def dense_stack_apply(params, cfg, x, positions, caches=None, cache_pos=None):
+    """caches: stacked (L, ...) KV dicts or None. Returns (x, new_caches, aux)."""
+    moe = cfg.family == "moe"
+
+    def body(carry, xs):
+        x, aux = carry
+        p, cache = xs
+        x, new_cache, a = layer_apply(
+            p, cfg, constrain(x), positions, moe=moe, cache=cache, cache_pos=cache_pos
+        )
+        return (constrain(x), aux + a), new_cache
+
+    body = _maybe_remat(body, cfg)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.float32(0)), (params, caches))
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# vlm stack: units of (cross_attn_every-1) self layers + 1 cross layer
+# ---------------------------------------------------------------------------
+
+def vlm_stack_init(key, cfg):
+    n_self = cfg.cross_attn_every - 1
+    n_units = cfg.num_layers // cfg.cross_attn_every
+    k1, k2 = jax.random.split(key)
+
+    def unit_init(k):
+        ka, kb = jax.random.split(k)
+        return {
+            "self": _stack_init(lambda kk: layer_init(kk, cfg), ka, n_self),
+            "cross": cross_layer_init(kb, cfg),
+        }
+
+    return _stack_init(unit_init, k1, n_units)
+
+
+def vlm_stack_apply(params, cfg, x, positions, patch_kv, caches=None, cache_pos=None):
+    """patch_kv: precomputed {"k","v"} per unit (stacked) for the stub patches."""
+    n_self = cfg.cross_attn_every - 1
+
+    def unit(carry, xs):
+        x = carry
+        p, cache, pkv = xs
+
+        def self_body(c, s_xs):
+            xx = c
+            sp, scache = s_xs
+            xx, nc, _ = layer_apply(sp, cfg, constrain(xx), positions, moe=False,
+                                    cache=scache, cache_pos=cache_pos)
+            return constrain(xx), nc
+
+        x, new_self = jax.lax.scan(self_body, x, (p["self"], cache))
+        x = cross_layer_apply(p["cross"], cfg, x, pkv)
+        return constrain(x), new_self
+
+    unit = _maybe_remat(unit, cfg)
+    x, new_caches = jax.lax.scan(unit, x, (params, caches, patch_kv))
+    return x, new_caches, jnp.float32(0)
+
+
+def vlm_patch_kv(params, cfg, patches):
+    """Precompute per-unit cross K/V from stub patch embeddings (B, P, d)."""
+    return jax.vmap(lambda p: cross_kv(p["cross"]["attn"], cfg, patches))(params)
+
+
+# ---------------------------------------------------------------------------
+# hybrid (recurrentgemma) stack: scan over pattern units + explicit tail
+# ---------------------------------------------------------------------------
+
+def hybrid_unit_init(key, cfg):
+    pat = cfg.block_pattern
+    ks = jax.random.split(key, 2 * len(pat))
+    unit = {"mix": [], "mlp": [], "ln_mix": [], "ln_mlp": []}
+    for i, kind in enumerate(pat):
+        if kind == "rglru":
+            unit["mix"].append(rglru_block_init(ks[2 * i], cfg))
+        else:
+            unit["mix"].append(attn_init(ks[2 * i], cfg))
+        unit["mlp"].append(swiglu_init(ks[2 * i + 1], cfg.d_model, cfg.d_ff))
+        unit["ln_mix"].append(rmsnorm_init(cfg.d_model))
+        unit["ln_mlp"].append(rmsnorm_init(cfg.d_model))
+    return unit
+
+
+def hybrid_stack_init(key, cfg):
+    pat_len = len(cfg.block_pattern)
+    n_units = cfg.num_layers // pat_len
+    n_tail = cfg.num_layers % pat_len
+    k1, k2 = jax.random.split(key)
+    params = {"units": _stack_init(lambda k: hybrid_unit_init(k, cfg), k1, n_units)}
+    if n_tail:
+        kt = jax.random.split(k2, n_tail)
+        tail = []
+        for i in range(n_tail):
+            kind = cfg.block_pattern[i]
+            ka, kb = jax.random.split(kt[i])
+            tail.append({
+                "mix": rglru_block_init(ka, cfg) if kind == "rglru" else attn_init(ka, cfg),
+                "mlp": swiglu_init(kb, cfg.d_model, cfg.d_ff),
+                "ln_mix": rmsnorm_init(cfg.d_model),
+                "ln_mlp": rmsnorm_init(cfg.d_model),
+            })
+        params["tail"] = tail
+    return params
+
+
+def _hybrid_block(kind, p_mix, p_mlp, ln_mix, ln_mlp, cfg, x, positions, cache, cache_pos):
+    if kind == "rglru":
+        h, new_cache = rglru_block(p_mix, cfg, rmsnorm(ln_mix, x, cfg.norm_eps), cache)
+    else:
+        h, new_cache = self_attention(
+            p_mix, cfg, rmsnorm(ln_mix, x, cfg.norm_eps), positions,
+            mode="local", cache=cache, cache_pos=cache_pos,
+        )
+    x = x + h
+    x = x + swiglu(p_mlp, rmsnorm(ln_mlp, x, cfg.norm_eps))
+    return x, new_cache
+
+
+def hybrid_stack_apply(params, cfg, x, positions, caches=None, cache_pos=None):
+    pat = cfg.block_pattern
+
+    def unit(carry, xs):
+        x = carry
+        p, cache = xs
+        new_caches = []
+        for i, kind in enumerate(pat):
+            c_i = None if cache is None else cache[i]
+            x, nc = _hybrid_block(
+                kind, p["mix"][i], p["mlp"][i], p["ln_mix"][i], p["ln_mlp"][i],
+                cfg, constrain(x), positions, c_i, cache_pos,
+            )
+            new_caches.append(nc)
+        return constrain(x), (new_caches if cache is not None else jnp.float32(0))
+
+    unit = _maybe_remat(unit, cfg)
+    unit_caches = None if caches is None else caches["units"]
+    x, new_unit_caches = jax.lax.scan(unit, x, (params["units"], unit_caches))
+
+    new_tail = []
+    if "tail" in params:
+        for i, p in enumerate(params["tail"]):
+            kind = cfg.block_pattern[i]
+            c_i = None if caches is None else caches["tail"][i]
+            x, nc = _hybrid_block(
+                kind, p["mix"], p["mlp"], p["ln_mix"], p["ln_mlp"],
+                cfg, x, positions, c_i, cache_pos,
+            )
+            new_tail.append(nc)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"units": new_unit_caches, "tail": new_tail}
+    return x, new_caches, jnp.float32(0)
+
+
+# ---------------------------------------------------------------------------
+# rwkv (ssm) stack
+# ---------------------------------------------------------------------------
+
+def rwkv_stack_init(key, cfg):
+    return _stack_init(lambda k: rwkv_layer_init(k, cfg), key, cfg.num_layers)
+
+
+def rwkv_stack_apply(params, cfg, x, caches=None):
+    def body(carry, xs):
+        x = carry
+        p, st = xs
+        x, new_st = rwkv_layer(p, cfg, constrain(x), st)
+        return constrain(x), (new_st if st is not None else jnp.float32(0))
+
+    body = _maybe_remat(body, cfg)
+    x, new_caches = jax.lax.scan(body, x, (params, caches))
+    return x, (new_caches if caches is not None else None), jnp.float32(0)
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg, batch: int, max_seq: int):
+    """Decode/prefill cache pytree for one model family."""
+    dt = jnp.dtype(cfg.dtype)
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def kv(seq):
+        return {
+            "k": jnp.zeros((batch, seq, kvh, hd), dt),
+            "v": jnp.zeros((batch, seq, kvh, hd), dt),
+        }
+
+    if cfg.family in ("dense", "moe", "audio"):  # audio: decoder self-KV
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape).copy(), kv(max_seq)
+        )
+    if cfg.family == "vlm":
+        n_units = cfg.num_layers // cfg.cross_attn_every
+        n_self = cfg.cross_attn_every - 1
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_units, n_self) + x.shape).copy(), kv(max_seq)
+        )
+    if cfg.family == "ssm":
+        st = rwkv_init_state(cfg, batch)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape).copy(), st
+        )
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        n_units = cfg.num_layers // len(pat)
+        n_tail = cfg.num_layers % len(pat)
+        window = min(cfg.local_window or max_seq, max_seq)
+
+        def block_cache(kind):
+            if kind == "rglru":
+                return rglru_init_state(cfg, batch)
+            c = kv(window)
+            c["slot_pos"] = jnp.full((window,), -1, jnp.int32)
+            return c
+
+        unit = [block_cache(kind) for kind in pat]
+        caches = {
+            "units": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_units,) + x.shape).copy(), unit
+            )
+        }
+        caches["tail"] = [block_cache(pat[i]) for i in range(n_tail)]
+        return caches
+    raise ValueError(cfg.family)

@@ -1,0 +1,13 @@
+"""LR schedules (pure functions of the step; jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, warmup: int = 200, total: int = 10_000, floor: float = 0.1):
+    """Linear warmup then cosine decay to ``floor`` of peak. Returns a scale."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = (step + 1.0) / jnp.maximum(warmup, 1)  # never a zero-LR first step
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,1 @@
+from repro.runtime.fault import Supervisor, RetryPolicy  # noqa: F401

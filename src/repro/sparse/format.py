@@ -1,0 +1,214 @@
+"""Padded-CSR sparse batch format and dim-tile statistics.
+
+The paper represents a sparse vector as an ascending-ordered list of
+``(d, w)`` feature pairs.  On TPU we need fixed shapes, so a *batch* of
+sparse vectors is stored as a padded feature matrix:
+
+  indices: (N, F) int32  — dimension index of each feature, ascending per
+                           row, padded with ``dim`` (one past the last
+                           valid dimension — a clean sentinel that scatters
+                           into a discard slot).
+  values:  (N, F) f32    — feature weights, 0.0 in padding slots.
+  nnz:     (N,)  int32   — number of valid features per row.
+
+``F`` is the max feature count in the batch (optionally bucketed up so a
+stream of blocks reuses one compiled shape).
+
+Dim-*tile* statistics (tile = 128 lanes by default) are the TPU analogue
+of the paper's per-dimension inverted-list bookkeeping: occupancy tells us
+which (vector, tile) cells hold any mass, frequency tells us how often a
+dimension is touched in a block (used by IIIB's frequency reordering), and
+``max_weight_per_dim`` is the paper's ``maxWeight_d(B_r)`` bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_TILE = 128
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SparseBatch:
+    """A batch of N sparse vectors of dimensionality ``dim`` (padded CSR)."""
+
+    indices: jax.Array  # (N, F) int32, padded with self.dim
+    values: jax.Array   # (N, F) f32, padded with 0
+    nnz: jax.Array      # (N,)  int32
+    dim: int            # static
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.indices, self.values, self.nnz), self.dim
+
+    @classmethod
+    def tree_unflatten(cls, dim, leaves):
+        indices, values, nnz = leaves
+        return cls(indices=indices, values=values, nnz=nnz, dim=dim)
+
+    # -- basic properties ---------------------------------------------------
+    @property
+    def num_vectors(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def max_features(self) -> int:
+        return self.indices.shape[1]
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_dense(cls, dense: np.ndarray, max_features: int | None = None) -> "SparseBatch":
+        """Pack a dense (N, D) array. Host-side (numpy); used by tests/data gen."""
+        dense = np.asarray(dense)
+        n, d = dense.shape
+        nnz = (dense != 0).sum(axis=1).astype(np.int32)
+        f = int(max_features if max_features is not None else max(int(nnz.max(initial=0)), 1))
+        indices = np.full((n, f), d, dtype=np.int32)
+        values = np.zeros((n, f), dtype=np.float32)
+        for i in range(n):
+            (nz,) = np.nonzero(dense[i])
+            nz = nz[:f]
+            indices[i, : len(nz)] = nz
+            values[i, : len(nz)] = dense[i, nz]
+        return cls(
+            indices=jnp.asarray(indices),
+            values=jnp.asarray(values),
+            nnz=jnp.asarray(np.minimum(nnz, f)),
+            dim=d,
+        )
+
+    @classmethod
+    def from_coo(
+        cls,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+        num_vectors: int,
+        dim: int,
+        max_features: int | None = None,
+    ) -> "SparseBatch":
+        """Pack COO triplets (host-side)."""
+        order = np.lexsort((cols, rows))
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        counts = np.bincount(rows, minlength=num_vectors)
+        f = int(max_features if max_features is not None else max(int(counts.max(initial=0)), 1))
+        indices = np.full((num_vectors, f), dim, dtype=np.int32)
+        values = np.zeros((num_vectors, f), dtype=np.float32)
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        for i in range(num_vectors):
+            lo, hi = starts[i], min(starts[i + 1], starts[i] + f)
+            k = hi - lo
+            indices[i, :k] = cols[lo:hi]
+            values[i, :k] = vals[lo:hi]
+        return cls(
+            indices=jnp.asarray(indices),
+            values=jnp.asarray(values),
+            nnz=jnp.asarray(np.minimum(counts, f).astype(np.int32)),
+            dim=dim,
+        )
+
+    # -- views ----------------------------------------------------------------
+    def slice_rows(self, start: int, size: int) -> "SparseBatch":
+        """Static row slice (block extraction for the nested-loop join)."""
+        return SparseBatch(
+            indices=jax.lax.dynamic_slice_in_dim(self.indices, start, size, 0),
+            values=jax.lax.dynamic_slice_in_dim(self.values, start, size, 0),
+            nnz=jax.lax.dynamic_slice_in_dim(self.nnz, start, size, 0),
+            dim=self.dim,
+        )
+
+
+# ---------------------------------------------------------------------------
+# dense projections
+# ---------------------------------------------------------------------------
+
+def densify(batch: SparseBatch) -> jax.Array:
+    """(N, D) dense view. Scatter-add with a discard column for padding."""
+    n, _ = batch.indices.shape
+    out = jnp.zeros((n, batch.dim + 1), dtype=batch.values.dtype)
+    out = out.at[jnp.arange(n)[:, None], batch.indices].add(batch.values)
+    return out[:, : batch.dim]
+
+
+def densify_tile(batch: SparseBatch, tile_start: int, tile: int = DEFAULT_TILE) -> jax.Array:
+    """(N, tile) dense view of one dim-tile ``[tile_start, tile_start + tile)``."""
+    n = batch.num_vectors
+    rel = batch.indices - tile_start
+    in_tile = (rel >= 0) & (rel < tile)
+    rel = jnp.where(in_tile, rel, tile)  # discard slot
+    vals = jnp.where(in_tile, batch.values, 0.0)
+    out = jnp.zeros((n, tile + 1), dtype=batch.values.dtype)
+    out = out.at[jnp.arange(n)[:, None], rel].add(vals)
+    return out[:, :tile]
+
+
+# ---------------------------------------------------------------------------
+# dim / tile statistics
+# ---------------------------------------------------------------------------
+
+def num_tiles(dim: int, tile: int = DEFAULT_TILE) -> int:
+    return -(-dim // tile)
+
+
+def tile_occupancy(batch: SparseBatch, tile: int = DEFAULT_TILE) -> jax.Array:
+    """(N, n_tiles) bool — does vector i have any non-zero in dim-tile t?
+
+    This is the tile-granular inverted index membership: the TPU analogue of
+    "s appears in inverted list I_d".
+    """
+    nt = num_tiles(batch.dim, tile)
+    tid = jnp.minimum(batch.indices // tile, nt)  # padding -> discard slot nt
+    valid = batch.indices < batch.dim
+    n = batch.num_vectors
+    occ = jnp.zeros((n, nt + 1), dtype=jnp.int32)
+    occ = occ.at[jnp.arange(n)[:, None], tid].add(valid.astype(jnp.int32))
+    return occ[:, :nt] > 0
+
+
+def dim_frequency(batch: SparseBatch) -> jax.Array:
+    """(D,) — number of vectors in the batch with a non-zero in each dim.
+
+    The paper's IIIB reorders dims so the most frequent (in B_r) come first.
+    """
+    valid = batch.indices < batch.dim
+    counts = jnp.zeros((batch.dim + 1,), dtype=jnp.int32)
+    counts = counts.at[jnp.where(valid, batch.indices, batch.dim)].add(1)
+    return counts[: batch.dim]
+
+
+def max_weight_per_dim(batch: SparseBatch) -> jax.Array:
+    """(D,) — ``maxWeight_d(B_r)`` from the paper: max value of dim d over the batch."""
+    valid = batch.indices < batch.dim
+    idx = jnp.where(valid, batch.indices, batch.dim)
+    vals = jnp.where(valid, batch.values, 0.0)
+    out = jnp.zeros((batch.dim + 1,), dtype=batch.values.dtype)
+    out = out.at[idx].max(vals)
+    return out[: batch.dim]
+
+
+def reorder_dims(batch: SparseBatch, perm: jax.Array) -> SparseBatch:
+    """Apply a dimension permutation: new_dim_of[d] = perm[d].
+
+    Rows are NOT re-sorted (sortedness is only needed by the host-side merge
+    oracle, not by the scatter-based JAX paths).
+    """
+    lut = jnp.concatenate([perm.astype(jnp.int32), jnp.array([batch.dim], jnp.int32)])
+    new_idx = lut[jnp.minimum(batch.indices, batch.dim)]
+    return SparseBatch(indices=new_idx, values=batch.values, nnz=batch.nnz, dim=batch.dim)
+
+
+def frequency_permutation(freq: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Return (perm, inv): perm[d] = new index of dim d, descending frequency.
+
+    ``freq`` is (D,). Most frequent dim maps to position 0 — the paper's
+    Create_Inverted_List_IIIB line 6.
+    """
+    order = jnp.argsort(-freq, stable=True)      # order[j] = old dim at new pos j
+    d = freq.shape[0]
+    perm = jnp.zeros((d,), jnp.int32).at[order].set(jnp.arange(d, dtype=jnp.int32))
+    return perm, order

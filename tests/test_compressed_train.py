@@ -1,0 +1,42 @@
+"""Int8+EF compressed gradient sync: loss parity with exact sync."""
+import pytest
+
+from tests.util_subproc import run_with_devices
+
+pytestmark = pytest.mark.slow
+
+
+def test_compressed_matches_exact_sync():
+    out = run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs.base import get_config
+from repro.launch.compressed_train import make_compressed_train_step
+from repro.launch.steps import StepOptions, init_train_state
+from repro.launch.mesh import make_host_mesh
+from repro.data.pipeline import make_lm_batch
+
+cfg = get_config('qwen3-0.6b').reduced()
+mesh = make_host_mesh(4, 1)
+opts = StepOptions(ce_chunk=8)
+traj = {}
+for compress in (False, True):
+    params, opt = init_train_state(cfg)
+    err = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    step = make_compressed_train_step(cfg, mesh, 'data', opts, compress=compress)
+    losses = []
+    with mesh:
+        for i in range(6):
+            b = make_lm_batch(0, i, 8, 16, cfg.vocab_size)
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            params, opt, err, m = step(params, opt, err, batch)
+            losses.append(float(m['loss']))
+    traj[compress] = losses
+exact, comp = traj[False], traj[True]
+print('exact:', [round(x, 4) for x in exact])
+print('comp :', [round(x, 4) for x in comp])
+assert comp[-1] < comp[0], 'compressed trainer must learn'
+# trajectories track within a small tolerance (EF bounds the drift)
+assert all(abs(a - b) < 0.05 for a, b in zip(exact, comp)), (exact, comp)
+print('COMPRESS_OK')
+""")
+    assert "COMPRESS_OK" in out

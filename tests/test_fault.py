@@ -1,0 +1,66 @@
+"""Fault-tolerance runtime: supervisor retries, NaN guard, watchdog arming."""
+import numpy as np
+import pytest
+
+from repro.runtime.fault import (
+    NonRetryableError,
+    RetryPolicy,
+    Supervisor,
+    guard_finite,
+)
+
+
+def test_supervisor_happy_path():
+    seen = []
+    sup = Supervisor(lambda i: seen.append(i), lambda r: 0,
+                     RetryPolicy(max_retries=0, backoff_s=0))
+    assert sup.run(0, 5) == 5
+    assert seen == [0, 1, 2, 3, 4]
+
+
+def test_supervisor_retries_and_restores():
+    calls = {"n": 0}
+    restores = []
+
+    def step(i):
+        calls["n"] += 1
+        if i == 3 and not restores:
+            raise RuntimeError("simulated device failure")
+
+    def restore_fn(reason):
+        restores.append(reason)
+        return 2  # last checkpoint at step 2
+
+    sup = Supervisor(step, restore_fn, RetryPolicy(max_retries=2, backoff_s=0.01))
+    assert sup.run(0, 6) == 6
+    assert len(restores) == 1
+    assert "simulated device failure" in restores[0]
+    assert sup.failures == 1
+    # steps 2..3 replayed
+    assert calls["n"] == 6 + 2
+
+
+def test_supervisor_exhausts_retries():
+    def step(i):
+        raise RuntimeError("always fails")
+
+    sup = Supervisor(step, lambda r: 0, RetryPolicy(max_retries=2, backoff_s=0.0))
+    with pytest.raises(RuntimeError, match="retries exhausted"):
+        sup.run(0, 3)
+
+
+def test_nonretryable_propagates():
+    def step(i):
+        raise NonRetryableError("NaN loss")
+
+    sup = Supervisor(step, lambda r: 0, RetryPolicy(max_retries=5, backoff_s=0.0))
+    with pytest.raises(NonRetryableError):
+        sup.run(0, 3)
+
+
+def test_guard_finite():
+    guard_finite("ok", np.float32(1.0))
+    with pytest.raises(NonRetryableError):
+        guard_finite("bad", np.float32(np.nan))
+    with pytest.raises(NonRetryableError):
+        guard_finite("bad", np.array([1.0, np.inf]))

@@ -1,0 +1,21 @@
+"""End-to-end system test: public API quickstart path."""
+import numpy as np
+
+from repro.core.blocknl import knn_join
+from repro.core.reference import oracle_knn
+from repro.sparse.datagen import synthetic_sparse
+from repro.sparse.format import densify
+
+
+def test_quickstart_api():
+    """The README quickstart: generate, join, verify."""
+    R = synthetic_sparse(40, dim=1000, nnz_mean=15, seed=0)
+    S = synthetic_sparse(60, dim=1000, nnz_mean=15, seed=1)
+    state = knn_join(R, S, k=5, algorithm="iiib")
+    assert state.scores.shape == (40, 5)
+    assert state.ids.shape == (40, 5)
+    osc, _ = oracle_knn(np.asarray(densify(R)), np.asarray(densify(S)), 5)
+    pos = osc > 0
+    np.testing.assert_allclose(
+        np.where(pos, np.asarray(state.scores), 0), np.where(pos, osc, 0), atol=1e-4
+    )

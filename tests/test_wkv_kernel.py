@@ -1,0 +1,67 @@
+"""Fused WKV Pallas kernel vs the exact recurrence and the model's
+chunked form (shape/chunk sweeps, interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.wkv.kernel import wkv_pallas
+from repro.kernels.wkv.ops import wkv
+from repro.kernels.wkv.ref import wkv_sequential
+
+
+def _inputs(bh, t, kk, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 4)
+    r = jax.random.normal(ks[0], (bh, t, kk), jnp.float32) * 0.5
+    k = jax.random.normal(ks[1], (bh, t, kk), jnp.float32) * 0.5
+    v = jax.random.normal(ks[2], (bh, t, kk), jnp.float32) * 0.5
+    # rwkv6 decay scale: logw = -exp(w0 + lora) with w0 = -6 -> (-0.1, -0.002];
+    # the CLAMP (±30) then never triggers and the clamp-free sequential
+    # oracle is exact (kernel==model under clamp is asserted separately)
+    lw = -jnp.exp(jax.random.normal(ks[3], (bh, t, kk), jnp.float32) - 4.0)
+    u = jax.random.normal(jax.random.key(seed + 9), (bh, kk), jnp.float32) * 0.1
+    return r, k, v, lw, u
+
+
+@pytest.mark.parametrize("bh,t,kk,chunk", [
+    (2, 64, 32, 16),
+    (3, 128, 64, 32),
+    (1, 256, 64, 128),   # one chunk per 2 steps
+    (2, 128, 16, 128),   # single chunk
+])
+def test_wkv_matches_sequential(bh, t, kk, chunk):
+    r, k, v, lw, u = _inputs(bh, t, kk)
+    out = wkv_pallas(r, k, v, lw, u, chunk=chunk)
+    ref = wkv_sequential(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_wkv_chunk_invariance():
+    """Same result for any chunking (the carry composition is exact)."""
+    r, k, v, lw, u = _inputs(2, 128, 32, seed=3)
+    o1 = wkv_pallas(r, k, v, lw, u, chunk=16)
+    o2 = wkv_pallas(r, k, v, lw, u, chunk=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-4)
+
+
+@pytest.mark.parametrize("decay_shift", [-4.0, -1.0])
+def test_wkv_ops_matches_model_chunked(decay_shift):
+    """ops-level wrapper == the model's pure-jnp chunked form — including
+    under STRONG decays (-1.0 shift) where the shared CLAMP semantics bite
+    (kernel and model must agree exactly there; the clamp-free sequential
+    oracle legitimately differs by the documented e^-CLAMP tolerance)."""
+    from repro.models.rwkv6 import _chunked_wkv
+
+    b, t, h, kk = 2, 96, 4, 16   # pads 96 -> 128
+    ks = jax.random.split(jax.random.key(5), 4)
+    r = jax.random.normal(ks[0], (b, t, h, kk), jnp.float32) * 0.5
+    k = jax.random.normal(ks[1], (b, t, h, kk), jnp.float32) * 0.5
+    v = jax.random.normal(ks[2], (b, t, h, kk), jnp.float32) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, t, h, kk), jnp.float32) + decay_shift)
+    u = jax.random.normal(jax.random.key(7), (h, kk), jnp.float32) * 0.1
+
+    out = wkv(r, k, v, lw, u, chunk=32)
+    ref = _chunked_wkv(r, k, v, lw, u, chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-4, rtol=3e-4)
