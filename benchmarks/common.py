@@ -8,7 +8,7 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
-from repro.core.blocknl import JoinStats, knn_join
+from repro.core.engine import JoinSpec, JoinStats, SparseKNNIndex
 from repro.core.reference import HostCSR, reference_join
 from repro.sparse.datagen import spectra_like, synthetic_sparse
 
@@ -38,20 +38,48 @@ def run_host_join(R, S, k, algorithm, r_block=None, s_block=None):
     return {"cpu_s": round(dt, 4)}
 
 
+def _spec(R, S, k, algorithm, r_block, s_block) -> JoinSpec:
+    """Legacy block semantics: None means a single block over the whole set."""
+    return JoinSpec(
+        k=k, algorithm=algorithm,
+        r_block=min(r_block or R.num_vectors, R.num_vectors),
+        s_block=min(s_block or S.num_vectors, S.num_vectors),
+    )
+
+
 def run_jax_join(R, S, k, algorithm, r_block=None, s_block=None):
+    index = SparseKNNIndex.build(S, _spec(R, S, k, algorithm, r_block, s_block))
     stats = JoinStats()
     # warm compile, then measure
-    knn_join(R, S, k, algorithm=algorithm, r_block=r_block, s_block=s_block)
-    st, dt = timed(
-        knn_join, R, S, k, algorithm=algorithm,
-        r_block=r_block, s_block=s_block, stats=stats,
-    )
+    index.query(R)
+    _, dt = timed(index.query, R, stats=stats)
     return {
         "wall_s": round(dt, 4),
+        "build_s": round(index.stats.build_wall_s, 4),
+        "index_builds": index.stats.index_builds,
         "tiles_scored": stats.tiles_scored,
         "list_entries": stats.list_entries,
         "rescued_columns": stats.rescued_columns,
         "dense_pairs": stats.dense_pairs,
+    }
+
+
+def run_repeated_query(R, S, k, algorithm, queries=3, r_block=None, s_block=None):
+    """Build once, query ``queries`` times — the serving shape.
+
+    Returns per-query wall times plus the engine's lifetime index_builds,
+    which stays at the number of S blocks (not queries x S blocks).
+    """
+    index = SparseKNNIndex.build(S, _spec(R, S, k, algorithm, r_block, s_block))
+    query_s = []
+    for _ in range(queries):
+        _, dt = timed(index.query, R)
+        query_s.append(round(dt, 4))
+    return {
+        "build_s": round(index.stats.build_wall_s, 4),
+        "query_s": query_s,
+        "s_blocks": index.num_blocks,
+        "index_builds": index.stats.index_builds,
     }
 
 
@@ -60,8 +88,8 @@ def work_counters(R, S, k, r_block, s_block) -> Dict[str, Dict]:
     out = {}
     for algorithm in ("bf", "iib", "iiib"):
         stats = JoinStats()
-        knn_join(R, S, k, algorithm=algorithm, r_block=r_block, s_block=s_block,
-                 stats=stats)
+        index = SparseKNNIndex.build(S, _spec(R, S, k, algorithm, r_block, s_block))
+        index.query(R, stats=stats)
         out[algorithm] = {
             "tiles_scored": stats.tiles_scored,
             "list_entries": stats.list_entries,

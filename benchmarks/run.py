@@ -3,6 +3,7 @@
   PYTHONPATH=src python -m benchmarks.run            # full
   PYTHONPATH=src python -m benchmarks.run --fast     # CI-sized
   PYTHONPATH=src python -m benchmarks.run --only fig3_effect_k
+  PYTHONPATH=src python -m benchmarks.run --smoke    # build-once/query-many CI check
 """
 from __future__ import annotations
 
@@ -22,11 +23,33 @@ SUITES = {
 }
 
 
+def smoke() -> int:
+    """Tiny build-once/query-many join on CPU: index reuse must be visible.
+
+    Fails (non-zero exit) if the engine rebuilt S-block indexes per query
+    instead of once per block — the regression the engine exists to prevent.
+    """
+    from benchmarks.common import gen, run_repeated_query
+
+    R = gen("synthetic", 96, seed=0, dim=2048, nnz=24)
+    S = gen("synthetic", 160, seed=1, dim=2048, nnz=24)
+    out = run_repeated_query(R, S, k=5, algorithm="iib", queries=3,
+                             r_block=48, s_block=64)
+    ok = out["index_builds"] == out["s_blocks"]
+    print(json.dumps({"smoke": out, "index_reuse_ok": ok}))
+    return 0 if ok else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized build-once/query-many check (engine index reuse)")
     ap.add_argument("--only", default=None, choices=list(SUITES))
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        return smoke()
 
     names = [args.only] if args.only else list(SUITES)
     summary = {}

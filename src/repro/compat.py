@@ -1,0 +1,31 @@
+"""Cross-version jax compatibility helpers.
+
+The container ships jax 0.4.x while parts of the codebase were written
+against newer APIs: ``jax.sharding.AxisType`` (>= 0.5) and the promotion
+of ``jax.experimental.shard_map.shard_map`` (``check_rep``) to
+``jax.shard_map`` (``check_vma``).  Route mesh/shard_map construction
+through here so both generations work.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the installed jax has them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kwargs = {"axis_types": (axis_type.Auto,) * len(axis_names)} if axis_type else {}
+    return jax.make_mesh(shape, axis_names, **kwargs)
+
+
+def shard_map(fn, mesh, *, in_specs, out_specs):
+    """``jax.shard_map`` without replication checks, across jax versions."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

@@ -1,21 +1,45 @@
 """The paper's contribution: KNN join for high-dimensional sparse data.
 
-Public API:
+Public API (build-once/query-many engine):
+  JoinSpec            — frozen join configuration (k, algorithm, geometry)
+  plan / JoinPlan     — C2/C3 cost-model planner resolving open spec fields
+  SparseKNNIndex      — build(S, spec) once, query(R) many; extend(S_new)
+  JoinResult          — (scores, ids, stats) of one query
+  JoinStats           — work counters incl. index_builds / wall times
+
+Compat wrappers (one-shot batch joins, identical results):
   knn_join            — block nested-loop join (bf | iib | iiib), host-driven
-  reference_join      — literal paper algorithms (numpy), ground truth
   ring_knn_join       — multi-device distributed join (shard_map ring)
+
+Support:
+  reference_join      — literal paper algorithms (numpy), ground truth
   TopKState           — streaming top-k candidate state
   SparseBatch         — padded-CSR sparse vector batch (repro.sparse)
 """
-from repro.core.blocknl import JoinStats, knn_join
+from repro.core.blocknl import knn_join
+from repro.core.engine import (
+    JoinPlan,
+    JoinResult,
+    JoinSpec,
+    JoinStats,
+    SparseKNNIndex,
+    distributed_join,
+    plan,
+)
 from repro.core.topk import TopKState, init_topk, min_prune_score, prune_scores, topk_update
 
 __all__ = [
-    "knn_join",
+    "JoinPlan",
+    "JoinResult",
+    "JoinSpec",
     "JoinStats",
+    "SparseKNNIndex",
     "TopKState",
+    "distributed_join",
     "init_topk",
-    "topk_update",
-    "prune_scores",
+    "knn_join",
     "min_prune_score",
+    "plan",
+    "prune_scores",
+    "topk_update",
 ]

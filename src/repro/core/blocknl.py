@@ -1,88 +1,36 @@
-"""Block nested-loop KNN join driver — paper Algorithm 1, host-orchestrated.
+"""Block nested-loop KNN join — paper Algorithm 1 as a thin compat wrapper.
 
-The outer set R is cut into resident blocks; for each, S streams through in
-blocks (sequential scan — the paper's buffer-friendly access pattern; on a
-real system the S stream would come from the storage layer / other pods).
-All three in-memory join algorithms plug in underneath:
+The actual driver now lives in the build-once/query-many engine
+(core/engine.py): ``knn_join`` builds a throwaway :class:`SparseKNNIndex`
+over S and runs a single query, which reproduces the paper's one-shot
+batch join exactly (same block geometry, same merge order, identical
+results).  Callers with a query *stream* against a fixed S should hold on
+to the index instead:
 
-  bf    — dense blocked matmul (core.bf)
-  iib   — tile-inverted index  (core.iib)
-  iiib  — threshold-refined index + candidate rescue (core.iiib)
+    index = SparseKNNIndex.build(S, JoinSpec(k=5, algorithm="iib"))
+    res1 = index.query(R1)       # S-block indexes built once, reused
+    res2 = index.query(R2)
 
-The driver is the natural host/jit boundary: block shapes are static (the
-final partial blocks are padded, with validity masks), so each distinct
-block geometry compiles once.  ``MinPruneScore`` is pulled to the host
-between S blocks — exactly the paper's "use results of previous loops to
-prune the next" — and fed into the next index build.
+``None`` block sizes keep the legacy meaning — a single block covering the
+whole set (the engine's planner only auto-sizes blocks for direct
+``JoinSpec`` users who leave them unset).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import iiib as iiib_mod
-from repro.core.bf import bf_block_scores, bf_join_block
-from repro.core.iib import iib_join_block
-from repro.core.index import (
-    DEFAULT_TILE,
-    active_tile_list,
-    build_tile_index,
-    dense_r_tiles,
-    max_rows_bound,
+from repro.core.engine import (  # noqa: F401  (JoinStats re-exported for compat)
+    JoinSpec,
+    JoinStats,
+    SparseKNNIndex,
 )
-from repro.core.topk import TopKState, init_topk, min_prune_score, topk_update
-from repro.sparse.format import SparseBatch, num_tiles
-
-
-@dataclasses.dataclass
-class JoinStats:
-    """Work accounting for the paper's cost-model comparisons (C2 vs C3)."""
-
-    blocks: int = 0
-    tiles_scored: int = 0          # (tile-matmul count) — IIB/IIIB indexed work
-    list_entries: int = 0          # Σ list lengths actually scored
-    rescued_columns: int = 0       # IIIB phase-2 width
-    dense_pairs: int = 0           # BF full-score pairs
-
-
-def _pad_block(batch: SparseBatch, start: int, size: int) -> tuple[SparseBatch, np.ndarray]:
-    """Host-side block slice, padded to ``size`` rows; returns (block, valid mask)."""
-    n = batch.num_vectors
-    stop = min(start + size, n)
-    idx = np.asarray(batch.indices[start:stop])
-    val = np.asarray(batch.values[start:stop])
-    nnz = np.asarray(batch.nnz[start:stop])
-    pad = size - (stop - start)
-    if pad:
-        idx = np.concatenate([idx, np.full((pad, idx.shape[1]), batch.dim, idx.dtype)])
-        val = np.concatenate([val, np.zeros((pad, val.shape[1]), val.dtype)])
-        nnz = np.concatenate([nnz, np.zeros(pad, nnz.dtype)])
-    valid = np.arange(size) < (stop - start)
-    block = SparseBatch(
-        indices=jnp.asarray(idx), values=jnp.asarray(val), nnz=jnp.asarray(nnz), dim=batch.dim
-    )
-    return block, valid
-
-
-@jax.jit
-def _bf_step(state, r_block, s_block, s_offset, s_valid):
-    return bf_join_block(state, r_block, s_block, s_offset, s_valid)
-
-
-_build_index_iib = jax.jit(build_tile_index, static_argnames=("max_rows", "tile"))
-_build_index_iiib = jax.jit(
-    partial(build_tile_index, uniform=False), static_argnames=("max_rows", "tile")
-)
+from repro.core.index import DEFAULT_TILE
+from repro.core.topk import TopKState
 
 
 def knn_join(
-    R: SparseBatch,
-    S: SparseBatch,
+    R,
+    S,
     k: int,
     algorithm: str = "iiib",
     r_block: Optional[int] = None,
@@ -107,131 +55,19 @@ def knn_join(
     if algorithm not in ("bf", "iib", "iiib"):
         raise ValueError(f"unknown algorithm {algorithm!r}")
     n_r, n_s = R.num_vectors, S.num_vectors
-    rb = min(r_block or n_r, n_r)
-    sb = min(s_block or n_s, n_s)
-    t_total = num_tiles(R.dim, tile)
-
-    sampled_ids = None
-    sampled_mask = None
-    if warm_start > 0 and algorithm == "iiib":
-        m = max(int(n_s * warm_start), k)
-        rng = np.random.default_rng(0)
-        sampled_ids = np.sort(rng.choice(n_s, size=min(m, n_s), replace=False))
-        sampled_mask = np.zeros(n_s, bool)
-        sampled_mask[sampled_ids] = True
-        sample_block = SparseBatch(
-            indices=S.indices[sampled_ids],
-            values=S.values[sampled_ids],
-            nnz=S.nnz[sampled_ids],
-            dim=S.dim,
-        )
-
-    out_scores = []
-    out_ids = []
-    for r0 in range(0, n_r, rb):
-        br, r_valid = _pad_block(R, r0, rb)
-        state = init_topk(rb, k)                       # InitPruneScore
-        if sampled_ids is not None:
-            # warm-start pass: exact BF scores of the sample seed the top-k
-            sc = bf_block_scores(br, sample_block)
-            state = topk_update(state, sc, jnp.asarray(sampled_ids, jnp.int32))
-            if stats is not None:
-                stats.dense_pairs += rb * len(sampled_ids)
-
-        if algorithm == "iib":
-            # R-side active tiles (host, concrete) — true tile skipping
-            occ_any = _host_tile_any(br, tile, t_total)
-            tiles = jnp.asarray(active_tile_list(occ_any))
-            r_tiles = dense_r_tiles(br, None, tile)
-        elif algorithm == "iiib":
-            rank, maxw, r_tiles = iiib_mod.prepare_r_block(br, tile)
-            rank_np = np.asarray(rank)
-            maxw_np = np.asarray(maxw)
-            occ_any = _host_tile_any(br, tile, t_total, rank_np)
-            tiles = jnp.asarray(active_tile_list(occ_any))
-
-        for s0 in range(0, n_s, sb):
-            bs, s_valid_np = _pad_block(S, s0, sb)
-            if sampled_mask is not None:
-                # sampled rows were already offered in the warm-start pass
-                in_block = np.zeros(sb, bool)
-                hi = min(s0 + sb, n_s)
-                in_block[: hi - s0] = sampled_mask[s0:hi]
-                s_valid_np = s_valid_np & ~in_block
-            s_valid = jnp.asarray(s_valid_np)
-            s_off = jnp.int32(s0)
-            if stats is not None:
-                stats.blocks += 1
-
-            if algorithm == "bf":
-                state = _bf_step(state, br, bs, s_off, s_valid)
-                if stats is not None:
-                    stats.dense_pairs += rb * sb
-
-            elif algorithm == "iib":
-                if use_kernel:
-                    # Pallas tile-skipping kernel path (block-sparse scoring)
-                    from repro.core.topk import topk_update as _tu
-                    from repro.kernels.knn_score.ops import knn_score as _ks
-
-                    scores = _ks(br, bs, tile=tile, block_r=min(256, rb), block_s=min(256, sb))
-                    ids = s_off + jnp.arange(sb, dtype=jnp.int32)
-                    masked = jnp.where((scores > 0.0) & s_valid[None, :], scores, -jnp.inf)
-                    state = _tu(state, masked, ids)
-                else:
-                    m = max_rows_bound(bs, tile)
-                    index = _build_index_iib(bs, max_rows=m, tile=tile)
-                    state = iib_join_block(state, r_tiles, index, tiles, s_off, s_valid)
-                if stats is not None:
-                    stats.tiles_scored += int(tiles.shape[0])
-                    if not use_kernel:
-                        stats.list_entries += int(np.asarray(index.counts).sum())
-
-            else:  # iiib
-                mps = float(np.asarray(min_prune_score(state)))
-                m = max_rows_bound(bs, tile, rank=rank_np, maxw=maxw_np, min_prune_score=mps)
-                index = _build_index_iiib(
-                    bs, max_rows=m, tile=tile, rank=rank, maxw=maxw,
-                    min_prune_score=jnp.float32(mps) if mps != -np.inf else jnp.float32(-np.inf),
-                )
-                scores, prune = iiib_mod.indexed_scores_block(state, r_tiles, index, tiles)
-                # rows already fully indexed: their A is exact — merge directly
-                state = iiib_mod.offer_fully_indexed(
-                    state, scores, index.pref_ub, s_off, s_valid
-                )
-                # candidate rescue for rows with an unindexed prefix
-                # (masked columns — padding or warm-start-sampled — excluded)
-                cand = iiib_mod.candidate_columns(
-                    np.where(s_valid_np[None, :], np.asarray(scores), 0.0),
-                    np.asarray(index.pref_ub), np.asarray(prune),
-                )
-                if (cand < sb).any():
-                    state = iiib_mod.rescue(
-                        state, br, bs, jnp.asarray(cand), s_off, num_cand=len(cand)
-                    )
-                if stats is not None:
-                    stats.tiles_scored += int(tiles.shape[0])
-                    stats.list_entries += int(np.asarray(index.counts).sum())
-                    stats.rescued_columns += int((cand < sb).sum())
-
-        sc = np.asarray(state.scores)[r_valid]
-        ids = np.asarray(state.ids)[r_valid]
-        out_scores.append(sc)
-        out_ids.append(ids)
-
-    return TopKState(
-        scores=jnp.asarray(np.concatenate(out_scores)),
-        ids=jnp.asarray(np.concatenate(out_ids)),
+    spec = JoinSpec(
+        k=k,
+        algorithm=algorithm,
+        r_block=min(r_block or n_r, n_r),
+        s_block=min(s_block or n_s, n_s),
+        tile=tile,
+        use_kernel=use_kernel,
+        warm_start=warm_start,
     )
-
-
-def _host_tile_any(block: SparseBatch, tile: int, t_total: int, rank: Optional[np.ndarray] = None) -> np.ndarray:
-    """(T,) bool — does ANY row of the block touch dim-tile t (permuted space)?"""
-    idx = np.asarray(block.indices)
-    valid = idx < block.dim
-    if rank is not None:
-        idx = np.where(valid, rank[np.minimum(idx, block.dim - 1)], block.dim)
-    tid = np.where(valid, idx // tile, t_total)
-    out = np.zeros(t_total + 1, dtype=bool)
-    out[np.minimum(tid.ravel(), t_total)] = True
-    return out[:t_total]
+    # streaming mode: one-shot joins keep the legacy O(block) device-memory
+    # profile (no S-wide device cache; IIB indexes are built per pair)
+    index = SparseKNNIndex.build(S, spec, cache_device_blocks=False)
+    res = index.query(R, stats=stats)
+    if stats is not None:
+        stats.build_wall_s += index.stats.build_wall_s
+    return TopKState(scores=res.scores, ids=res.ids)

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.bf import bf_block_scores
 from repro.core.iiib import iiib_join_block_uniform, prepare_r_block
 from repro.core.index import build_tile_index, dense_r_tiles, tile_scores
@@ -67,9 +68,34 @@ def ring_knn_join(
 ) -> TopKState:
     """R ⋈_KNN S over a device mesh. R/S row counts must divide the ring size.
 
-    Returns a TopKState for all R rows (sharded over ``ring_axes``), with
-    global S ids.  ``n_*_valid`` mask padding rows appended by the caller.
+    Compat wrapper over the engine (core/engine.py): builds a JoinSpec and
+    dispatches to :func:`repro.core.engine.distributed_join`, which calls the
+    shard_map driver below.  Returns a TopKState for all R rows (sharded
+    over ``ring_axes``), with global S ids.  ``n_*_valid`` mask padding rows
+    appended by the caller.
     """
+    from repro.core.engine import JoinSpec, distributed_join
+
+    spec = JoinSpec(k=k, algorithm=algorithm, tile=tile)
+    return distributed_join(
+        R, S, spec, mesh, ring_axes=ring_axes, dim_axis=dim_axis,
+        n_r_valid=n_r_valid, n_s_valid=n_s_valid,
+    )
+
+
+def _ring_join_impl(
+    R: SparseBatch,
+    S: SparseBatch,
+    k: int,
+    mesh: Mesh,
+    algorithm: str = "iiib",
+    ring_axes: Sequence[str] = ("data",),
+    dim_axis: Optional[str] = None,
+    tile: int = 128,
+    n_r_valid: Optional[int] = None,
+    n_s_valid: Optional[int] = None,
+) -> TopKState:
+    """The shard_map ring driver (see module docstring for the mapping)."""
     if algorithm not in ("bf", "iib", "iiib"):
         raise ValueError(algorithm)
     if algorithm == "iiib" and dim_axis is not None:
@@ -165,12 +191,8 @@ def ring_knn_join(
         )
 
     out_specs = TopKState(scores=mat_spec, ids=mat_spec)
-    fn = jax.shard_map(
-        local_join,
-        mesh=mesh,
-        in_specs=(spec_of(R), spec_of(S)),
-        out_specs=out_specs,
-        check_vma=False,
+    fn = compat.shard_map(
+        local_join, mesh, in_specs=(spec_of(R), spec_of(S)), out_specs=out_specs
     )
     return fn(R, S)
 

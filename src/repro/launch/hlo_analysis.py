@@ -147,6 +147,12 @@ def _operands(rest: str) -> List[str]:
         tok = tok.strip()
         if tok.startswith("%"):
             out.append(tok)
+        else:
+            # older HLO text inlines the operand type: "f32[128,256]{1,0} %Arg_0.1"
+            for part in tok.split():
+                if part.startswith("%"):
+                    out.append(part)
+                    break
     return out
 
 

@@ -54,6 +54,7 @@ class Server:
         self.slot_req: List[Optional[Request]] = [None] * batch
         self.slot_pos = np.zeros(batch, np.int32)
         self.slot_tok = np.zeros((batch, 1), np.int32)
+        self.finished: List[Request] = []
 
     def _stub_batch(self, tokens):
         batch = {"tokens": tokens}
@@ -80,8 +81,15 @@ class Server:
                 nxt = int(jnp.argmax(logits[0, -1]))
                 req.out.append(nxt)
                 self.slot_tok[s, 0] = nxt
+                if len(req.out) >= req.max_new:
+                    self._finish(s, req)
                 return True
         return False
+
+    def _finish(self, s: int, req: Request):
+        req.done = True
+        self.slot_req[s] = None  # slot freed: continuous batching
+        self.finished.append(req)
 
     def step(self):
         """One decode step for every occupied slot."""
@@ -101,8 +109,7 @@ class Server:
             req.out.append(nxt)
             self.slot_tok[s, 0] = nxt
             if len(req.out) >= req.max_new or self.slot_pos[s] >= self.max_seq - 1:
-                req.done = True
-                self.slot_req[s] = None  # slot freed: continuous batching
+                self._finish(s, req)
 
     def occupancy(self) -> int:
         return sum(r is not None for r in self.slot_req)
@@ -129,7 +136,6 @@ def main(argv=None):
                 args.max_new)
         for i in range(args.requests)
     ]
-    finished: List[Request] = []
     srv = Server(cfg, args.batch, args.max_seq)
 
     t0 = time.time()
@@ -139,16 +145,18 @@ def main(argv=None):
             pending.pop(0)
         srv.step()
         steps += 1
-        finished.extend(
-            r for r in (srv.slot_req + [None]) if False
-        )
         if steps > 10_000:
             raise RuntimeError("serving loop did not converge")
     dt = time.time() - t0
-    total_tokens = args.requests * args.max_new
+    finished = srv.finished
+    tokens_per_request = {str(r.rid): len(r.out) for r in sorted(finished, key=lambda r: r.rid)}
+    total_tokens = sum(tokens_per_request.values())
     print(json.dumps({
-        "arch": cfg.name, "requests": args.requests, "decode_steps": steps,
-        "wall_s": round(dt, 2), "tok_per_s": round(total_tokens / max(dt, 1e-9), 1),
+        "arch": cfg.name, "requests": args.requests, "completed": len(finished),
+        "decode_steps": steps, "wall_s": round(dt, 2),
+        "tok_per_s": round(total_tokens / max(dt, 1e-9), 1),
+        "total_tokens": total_tokens,
+        "tokens_per_request": tokens_per_request,
     }))
     return 0
 

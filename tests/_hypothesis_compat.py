@@ -1,0 +1,28 @@
+"""Import shim: property tests skip cleanly when `hypothesis` is absent.
+
+The container does not ship hypothesis; a hard import would fail the whole
+module at collection time, taking the non-property tests down with it.
+Import ``given``/``settings``/``st`` from here instead of from hypothesis.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Accepts any strategy construction; values are never drawn."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

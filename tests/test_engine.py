@@ -1,0 +1,171 @@
+"""Build-once/query-many engine (core/engine.py): parity with the legacy
+one-shot join and the dense oracle, index-reuse accounting, extend()
+equivalence, and C2/C3 planner sanity."""
+import numpy as np
+import pytest
+
+from repro.core.blocknl import knn_join
+from repro.core.engine import (
+    PAIR_BUDGET,
+    JoinSpec,
+    JoinStats,
+    SparseKNNIndex,
+    plan,
+)
+from repro.core.reference import oracle_knn
+from repro.sparse.datagen import synthetic_sparse
+from repro.sparse.format import SparseBatch, densify
+
+
+def _rows(sb: SparseBatch, lo: int, hi: int) -> SparseBatch:
+    return SparseBatch(
+        indices=sb.indices[lo:hi], values=sb.values[lo:hi], nnz=sb.nnz[lo:hi], dim=sb.dim
+    )
+
+
+def _check_oracle(scores, osc):
+    pos = osc > 0
+    np.testing.assert_allclose(
+        np.where(pos, scores, 0.0), np.where(pos, osc, 0.0), atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("algorithm", ["bf", "iib", "iiib"])
+def test_engine_matches_legacy_and_oracle(small_rs, algorithm):
+    """engine.query == legacy knn_join (identical arrays) == dense oracle."""
+    R, S = small_rs
+    spec = JoinSpec(k=5, algorithm=algorithm, r_block=24, s_block=32)
+    res = SparseKNNIndex.build(S, spec).query(R)
+    legacy = knn_join(R, S, 5, algorithm=algorithm, r_block=24, s_block=32)
+    np.testing.assert_array_equal(np.asarray(res.scores), np.asarray(legacy.scores))
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(legacy.ids))
+    osc, _ = oracle_knn(np.asarray(densify(R)), np.asarray(densify(S)), 5)
+    _check_oracle(np.asarray(res.scores), osc)
+
+
+@pytest.mark.parametrize("algorithm", ["iib", "iiib"])
+def test_engine_ragged_s_blocks(small_rs, algorithm):
+    """n_s not divisible by s_block: the padded final block must stay exact."""
+    R, S = small_rs  # n_s = 80; 80 = 2*33 + 14
+    spec = JoinSpec(k=5, algorithm=algorithm, r_block=20, s_block=33)
+    res = SparseKNNIndex.build(S, spec).query(R)
+    osc, _ = oracle_knn(np.asarray(densify(R)), np.asarray(densify(S)), 5)
+    _check_oracle(np.asarray(res.scores), osc)
+
+
+def test_iib_index_built_once_across_queries(small_rs):
+    """Two query() calls on one index build each S-block index exactly once."""
+    R, S = small_rs
+    spec = JoinSpec(k=5, algorithm="iib", r_block=24, s_block=32)
+    index = SparseKNNIndex.build(S, spec)
+    assert index.num_blocks == 3
+    assert index.stats.index_builds == index.num_blocks  # built at build() time
+    q1, q2 = JoinStats(), JoinStats()
+    r1 = index.query(R, stats=q1)
+    r2 = index.query(_rows(R, 0, 24), stats=q2)
+    assert q1.index_builds == 0 and q2.index_builds == 0
+    assert index.stats.index_builds == index.num_blocks  # NOT queries x blocks
+    assert q1.query_wall_s > 0 and index.stats.build_wall_s > 0
+    # both queries exact
+    osc, _ = oracle_knn(np.asarray(densify(R)), np.asarray(densify(S)), 5)
+    _check_oracle(np.asarray(r1.scores), osc)
+    _check_oracle(np.asarray(r2.scores), osc[:24])
+
+
+def test_iiib_rebuilds_are_threshold_only(small_rs):
+    """IIIB rebuilds its refinement per (B_r, B_s) pair — and that count is
+    visible, per pair, not hidden."""
+    R, S = small_rs
+    spec = JoinSpec(k=5, algorithm="iiib", r_block=24, s_block=32)
+    index = SparseKNNIndex.build(S, spec)
+    assert index.stats.index_builds == 0  # nothing cacheable built up front
+    stats = JoinStats()
+    index.query(R, stats=stats)
+    assert stats.index_builds == 2 * 3  # ceil(48/24) r-blocks x 3 s-blocks
+
+
+def test_extend_matches_concatenated_build(small_rs):
+    R, S = small_rs
+    spec = JoinSpec(k=5, algorithm="iib", r_block=24, s_block=32)
+    grown = SparseKNNIndex.build(_rows(S, 0, 50), spec).extend(_rows(S, 50, 80))
+    full = SparseKNNIndex.build(S, spec)
+    ra, rb = grown.query(R), full.query(R)
+    np.testing.assert_array_equal(np.asarray(ra.scores), np.asarray(rb.scores))
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    assert grown.num_vectors == 80 and grown.num_blocks == full.num_blocks
+
+
+def test_extend_unifies_feature_width(small_rs):
+    """Extending with a batch of different max_features must stay exact."""
+    R, S = small_rs
+    extra = synthetic_sparse(24, dim=512, nnz_mean=35, nnz_std=5, seed=9)
+    assert extra.max_features != S.max_features
+    spec = JoinSpec(k=5, algorithm="iiib", r_block=24, s_block=32)
+    res = SparseKNNIndex.build(S, spec).extend(extra).query(R)
+    dense_s = np.concatenate([np.asarray(densify(S)), np.asarray(densify(extra))])
+    osc, _ = oracle_knn(np.asarray(densify(R)), dense_s, 5)
+    _check_oracle(np.asarray(res.scores), osc)
+
+
+def test_extend_rebuilds_only_tail_blocks(small_rs):
+    _, S = small_rs
+    spec = JoinSpec(k=5, algorithm="iib", s_block=32)
+    index = SparseKNNIndex.build(_rows(S, 0, 64), spec)  # 2 full blocks
+    assert index.stats.index_builds == 2
+    index.extend(_rows(S, 64, 80))  # old tail was block-aligned: 1 new block
+    assert index.stats.index_builds == 3
+    index.extend(synthetic_sparse(8, dim=512, nnz_mean=20, seed=3))
+    # 80 % 32 = 16: the partial block 2 is rebuilt, no new block started
+    assert index.num_blocks == 3 and index.stats.index_builds == 4
+
+
+def test_warm_start_via_engine(small_rs):
+    R, S = small_rs
+    spec = JoinSpec(k=5, algorithm="iiib", r_block=24, s_block=20, warm_start=0.1)
+    res = SparseKNNIndex.build(S, spec).query(R)
+    osc, _ = oracle_knn(np.asarray(densify(R)), np.asarray(densify(S)), 5)
+    _check_oracle(np.asarray(res.scores), osc)
+
+
+def test_planner_cost_model_ordering():
+    """Planner choices track the C2/C3 estimates and respect block bounds."""
+    spec = JoinSpec(k=5)
+    sparse = plan((1000, 8, 10_000), (1000, 8, 10_000), spec)
+    assert sparse.cost_iib < sparse.cost_bf
+    assert sparse.algorithm == "iiib"  # indexed side wins → threshold-refined
+    dense = plan((1000, 5000, 10_000), (1000, 5000, 10_000), spec)
+    assert dense.cost_bf <= dense.cost_iib
+    assert dense.algorithm == "bf"
+    for p in (sparse, dense):
+        assert 1 <= p.r_block <= 1000 and 1 <= p.s_block <= 1000
+        assert p.r_block * p.s_block <= PAIR_BUDGET
+    # explicit spec fields pass through unchanged
+    pinned = plan(
+        (1000, 8, 10_000), (1000, 8, 10_000),
+        JoinSpec(k=5, algorithm="bf", r_block=64, s_block=96),
+    )
+    assert (pinned.algorithm, pinned.r_block, pinned.s_block) == ("bf", 64, 96)
+    # a narrower occupied-tile universe can only shrink the C3 estimate
+    narrowed = plan((1000, 8, 10_000), (1000, 8, 10_000), spec, occupied_tiles=10)
+    assert narrowed.cost_iib <= sparse.cost_iib
+
+
+def test_planner_resolves_unset_spec_fields(small_rs):
+    """With algorithm/blocks unset, build+query still runs and stays exact."""
+    R, S = small_rs
+    index = SparseKNNIndex.build(S, JoinSpec(k=5))
+    p = index.plan_for(R)
+    assert p.algorithm == index.algorithm
+    res = index.query(R)
+    osc, _ = oracle_knn(np.asarray(densify(R)), np.asarray(densify(S)), 5)
+    _check_oracle(np.asarray(res.scores), osc)
+
+
+def test_dim_mismatch_rejected(small_rs):
+    _, S = small_rs
+    index = SparseKNNIndex.build(S, JoinSpec(k=5, algorithm="bf"))
+    bad = synthetic_sparse(4, dim=256, nnz_mean=10, seed=0)
+    with pytest.raises(ValueError):
+        index.query(bad)
+    with pytest.raises(ValueError):
+        index.extend(bad)

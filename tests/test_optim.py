@@ -74,16 +74,16 @@ def test_psum_int8_with_error_feedback():
     g = rng.standard_normal((4, 32)).astype(np.float32)
 
     # single-device psum: mean == identity; check EF telescopes over steps
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import compat
+
+    mesh = compat.make_mesh((1,), ("pod",))
 
     def step(grads, err):
         return psum_int8(grads, "pod", err)
 
-    f = jax.jit(jax.shard_map(step, mesh=mesh,
-                              in_specs=(jax.sharding.PartitionSpec(),) * 2,
-                              out_specs=(jax.sharding.PartitionSpec(),) * 2,
-                              check_vma=False))
+    f = jax.jit(compat.shard_map(step, mesh,
+                                 in_specs=(jax.sharding.PartitionSpec(),) * 2,
+                                 out_specs=(jax.sharding.PartitionSpec(),) * 2))
     err = jnp.zeros_like(jnp.asarray(g))
     total = jnp.zeros_like(err)
     for i in range(8):

@@ -1,7 +1,7 @@
 """Paper-faithful host reference implementations (Algorithms 1-4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.reference import HostCSR, oracle_knn, reference_join
 from repro.sparse.datagen import synthetic_sparse

@@ -60,3 +60,22 @@ def test_deterministic_generation():
             srv.step()
         outs.append(tuple(r.out))
     assert outs[0] == outs[1]
+
+
+def test_finished_requests_tracked():
+    """Completed requests land in Server.finished exactly once, with their
+    full token output (the dead collection in main() used to drop them)."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    srv = Server(cfg, batch=2, max_seq=64)
+    rng = np.random.default_rng(2)
+    reqs = [
+        Request(i, rng.integers(0, 256, 6).astype(np.int32), max_new=4)
+        for i in range(5)
+    ]
+    pending = list(reqs)
+    while pending or srv.occupancy():
+        while pending and srv.admit(pending[0]):
+            pending.pop(0)
+        srv.step()
+    assert sorted(r.rid for r in srv.finished) == [0, 1, 2, 3, 4]
+    assert all(r.done and len(r.out) == 4 for r in srv.finished)

@@ -1,7 +1,7 @@
 """Streaming top-k state properties (hypothesis)."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.topk import init_topk, min_prune_score, prune_scores, topk_update
 
