@@ -1,9 +1,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test smoke
+.PHONY: check test smoke bench
 
-# tier-1 verify + engine smoke (index reuse observable on CPU)
+# tier-1 verify + engine smoke (index reuse + dispatch shape observable on CPU)
 check: test smoke
 
 test:
@@ -11,3 +11,7 @@ test:
 
 smoke:
 	$(PYTHON) -m benchmarks.run --smoke
+
+# machine-readable perf record for the PR trajectory (BENCH_*.json)
+bench:
+	$(PYTHON) -m benchmarks.run --fast --out BENCH_PR2.json

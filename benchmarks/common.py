@@ -1,6 +1,7 @@
 """Shared benchmark utilities: timing, data, work counters, reporting."""
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -64,20 +65,34 @@ def run_jax_join(R, S, k, algorithm, r_block=None, s_block=None):
     }
 
 
-def run_repeated_query(R, S, k, algorithm, queries=3, r_block=None, s_block=None):
+def run_repeated_query(R, S, k, algorithm, queries=3, r_block=None, s_block=None,
+                       use_kernel=False):
     """Build once, query ``queries`` times — the serving shape.
 
-    Returns per-query wall times plus the engine's lifetime index_builds,
-    which stays at the number of S blocks (not queries x S blocks).
+    Returns per-query wall times, device dispatches and host syncs (the
+    scanned driver's O(R-blocks) dispatch shape is observable here), plus
+    the engine's lifetime index_builds, which stays at the number of S
+    blocks (not queries x S blocks).
     """
-    index = SparseKNNIndex.build(S, _spec(R, S, k, algorithm, r_block, s_block))
-    query_s = []
+    spec = _spec(R, S, k, algorithm, r_block, s_block)
+    if use_kernel:
+        spec = dataclasses.replace(spec, use_kernel=True)
+    index = SparseKNNIndex.build(S, spec)
+    query_s, dispatches, syncs, entries = [], [], [], []
     for _ in range(queries):
-        _, dt = timed(index.query, R)
+        stats = JoinStats()
+        _, dt = timed(index.query, R, stats=stats)
         query_s.append(round(dt, 4))
+        dispatches.append(stats.device_dispatches)
+        syncs.append(stats.host_syncs)
+        entries.append(stats.list_entries)
     return {
         "build_s": round(index.stats.build_wall_s, 4),
         "query_s": query_s,
+        "device_dispatches": dispatches,
+        "host_syncs": syncs,
+        "list_entries": entries,
+        "r_blocks": -(-R.num_vectors // (spec.r_block or R.num_vectors)),
         "s_blocks": index.num_blocks,
         "index_builds": index.stats.index_builds,
     }

@@ -4,11 +4,14 @@
   PYTHONPATH=src python -m benchmarks.run --fast     # CI-sized
   PYTHONPATH=src python -m benchmarks.run --only fig3_effect_k
   PYTHONPATH=src python -m benchmarks.run --smoke    # build-once/query-many CI check
+  PYTHONPATH=src python -m benchmarks.run --fast --out BENCH_PR2.json
+                                                     # machine-readable perf record
 """
 from __future__ import annotations
 
 import argparse
 import json
+import platform
 import sys
 import time
 
@@ -24,32 +27,97 @@ SUITES = {
 
 
 def smoke() -> int:
-    """Tiny build-once/query-many join on CPU: index reuse must be visible.
+    """Tiny build-once/query-many join on CPU: the engine's serving shape
+    must be visible in the counters.
 
-    Fails (non-zero exit) if the engine rebuilt S-block indexes per query
-    instead of once per block — the regression the engine exists to prevent.
+    Fails (non-zero exit) on either regression the engine exists to prevent:
+      * index reuse — S-block indexes rebuilt per query instead of once;
+      * dispatch shape — a query stream exceeding queries x r_blocks scan
+        dispatches (i.e. the driver fell back to per-(R,S)-pair dispatch),
+        or host syncs on the BF/IIB scan path beyond the one per-R-block
+        result pull (i.e. a per-pair host round-trip crept back in).
     """
     from benchmarks.common import gen, run_repeated_query
 
     R = gen("synthetic", 96, seed=0, dim=2048, nnz=24)
     S = gen("synthetic", 160, seed=1, dim=2048, nnz=24)
-    out = run_repeated_query(R, S, k=5, algorithm="iib", queries=3,
+    queries = 3
+    out = run_repeated_query(R, S, k=5, algorithm="iib", queries=queries,
                              r_block=48, s_block=64)
-    ok = out["index_builds"] == out["s_blocks"]
-    print(json.dumps({"smoke": out, "index_reuse_ok": ok}))
-    return 0 if ok else 1
+    reuse_ok = out["index_builds"] == out["s_blocks"]
+    r_blocks = out["r_blocks"]
+    dispatch_ok = sum(out["device_dispatches"]) <= queries * r_blocks
+    sync_ok = all(h <= r_blocks for h in out["host_syncs"])
+    print(json.dumps({
+        "smoke": out,
+        "index_reuse_ok": reuse_ok,
+        "scan_dispatch_ok": dispatch_ok,
+        "host_sync_ok": sync_ok,
+    }))
+    return 0 if (reuse_ok and dispatch_ok and sync_ok) else 1
+
+
+def perf_record(fast: bool, out_path: str) -> int:
+    """Write the PR-trajectory perf record: per-query wall time, device
+    dispatches, host syncs, index builds, and list-entry work for a
+    build-once/query-many stream of every algorithm (+ the fused-kernel
+    path).  Machine-readable so successive PRs can be diffed."""
+    import jax
+
+    from benchmarks.common import gen, run_repeated_query
+
+    n_r, n_s, dim, nnz = (128, 512, 4096, 32) if fast else (256, 2048, 8192, 64)
+    r_block, s_block, k, queries = n_r // 2, n_s // 4, 5, 3
+    R = gen("synthetic", n_r, seed=0, dim=dim, nnz=nnz)
+    S = gen("synthetic", n_s, seed=1, dim=dim, nnz=nnz)
+
+    streams = {}
+    for name, algorithm, use_kernel in (
+        ("bf", "bf", False),
+        ("iib", "iib", False),
+        ("iib_kernel", "iib", True),
+        ("iiib", "iiib", False),
+    ):
+        streams[name] = run_repeated_query(
+            R, S, k=k, algorithm=algorithm, queries=queries,
+            r_block=r_block, s_block=s_block, use_kernel=use_kernel,
+        )
+        print(f"{name}: query_s={streams[name]['query_s']} "
+              f"dispatches={streams[name]['device_dispatches']}", flush=True)
+
+    record = {
+        "config": {
+            "n_r": n_r, "n_s": n_s, "dim": dim, "nnz_mean": nnz, "k": k,
+            "r_block": r_block, "s_block": s_block, "queries": queries,
+            "fast": fast,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "platform": platform.platform(),
+        },
+        "streams": streams,
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return 0
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized build-once/query-many check (engine index reuse)")
+                    help="CI-sized build-once/query-many check (index reuse + dispatch shape)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write a machine-readable perf record (wall time per query, "
+                         "device dispatches, index_builds, list_entries) and exit")
     ap.add_argument("--only", default=None, choices=list(SUITES))
     args = ap.parse_args(argv)
 
     if args.smoke:
         return smoke()
+    if args.out:
+        return perf_record(args.fast, args.out)
 
     names = [args.only] if args.only else list(SUITES)
     summary = {}

@@ -14,6 +14,8 @@ never materializes at once unless D is small).
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
@@ -61,3 +63,22 @@ def bf_join_block(
     if s_valid is not None:
         scores = jnp.where(s_valid[None, :], scores, -jnp.inf)
     return topk_update(state, scores, ids)
+
+
+@partial(jax.jit, static_argnames=("dim",))
+def bf_scan_join(state, r_block, s_idx, s_val, s_nnz, s_starts, s_valid, dim):
+    """BF inner loop over ALL stacked S blocks as one ``lax.scan``.
+
+    The device-resident form of Algorithm 1's S loop: the engine stacks its
+    cached S blocks into ``(B, s_block, …)`` batched arrays at build time
+    and the whole S side of one R block is this single dispatch, carrying
+    the TopKState — no per-(B_r, B_s)-pair launches or host syncs.
+    """
+
+    def body(st, xs):
+        bi, bv, bn, off, vm = xs
+        blk = SparseBatch(indices=bi, values=bv, nnz=bn, dim=dim)
+        return bf_join_block(st, r_block, blk, off, vm), None
+
+    state, _ = jax.lax.scan(body, state, (s_idx, s_val, s_nnz, s_starts, s_valid))
+    return state

@@ -39,18 +39,20 @@ def knn_join(
     stats: Optional[JoinStats] = None,
     use_kernel: bool = False,
     warm_start: float = 0.0,
+    seed: int = 0,
 ) -> TopKState:
     """R ⋈_KNN S. Returns a TopKState over all of R (global S ids).
 
-    ``use_kernel`` routes tile scoring through the Pallas kernel
-    (kernels/knn_score); default is the pure-jnp path.
+    ``use_kernel`` routes scoring through the fused score→top-k Pallas
+    kernel (kernels/knn_topk); default is the pure-jnp path.
 
     ``warm_start`` (IIIB only; beyond-paper — the refinement the paper's
     future-work section asks for): join each R block against a random
     ``warm_start``-fraction sample of S FIRST, so ``MinPruneScore`` is
     live from the very first S block instead of -inf.  Exactness is kept
     by masking the sampled columns out of their home blocks (each S row
-    is offered exactly once).
+    is offered exactly once).  ``seed`` drives the sampler (vary it across
+    a query stream so every query doesn't draw the identical sample).
     """
     if algorithm not in ("bf", "iib", "iiib"):
         raise ValueError(f"unknown algorithm {algorithm!r}")
@@ -63,6 +65,7 @@ def knn_join(
         tile=tile,
         use_kernel=use_kernel,
         warm_start=warm_start,
+        seed=seed,
     )
     # streaming mode: one-shot joins keep the legacy O(block) device-memory
     # profile (no S-wide device cache; IIB indexes are built per pair)

@@ -1,4 +1,5 @@
-"""Build-once/query-many KNN join engine.
+"""Build-once/query-many KNN join engine with a device-resident hot path
+(DESIGN.md §3).
 
 The paper's block nested-loop driver (Algorithm 1) is a one-shot batch
 join: every (B_r, B_s) block pair builds the inverted index of B_s from
@@ -7,25 +8,43 @@ service in launch/join_job.py) stream fresh R batches against the *same*
 S datastore, so the one-shot driver pays index construction
 O(queries x S-blocks) times.  This module separates the two phases:
 
-  JoinSpec        — frozen join configuration (k, algorithm, geometry).
+  JoinSpec        — frozen join configuration (k, algorithm, geometry, seed).
   plan()          — resolve algorithm + block geometry from the paper's
                     C2/C3 cost model when the spec leaves them open.
-  SparseKNNIndex  — ``build(S, spec)`` pads S into blocks ONCE, builds and
-                    caches each block's IIB tile index (threshold-free, so
-                    fully reusable) plus host-side feature mirrors and the
-                    dim-frequency / max-weight statistics; ``extend(S_new)``
-                    grows the datastore rebuilding only the tail blocks;
-                    ``query(R)`` streams R blocks against the cached
-                    structures.  IIIB still rebuilds its threshold-dependent
-                    refinement per (B_r, B_s) pair — the threshold is the
-                    live MinPruneScore, which cannot be cached — but reuses
-                    the cached blocks and host mirrors, and the rebuild count
-                    is now observable via ``JoinStats.index_builds``.
+  SparseKNNIndex  — ``build(S, spec)`` pads S into blocks ONCE and stacks
+                    them into batched device arrays; ``extend(S_new)`` grows
+                    the datastore rebuilding only the tail blocks;
+                    ``query(R)`` streams R blocks against the cache.
   JoinResult      — (scores, ids, stats) of one query.
+
+**Device-resident query hot path.**  With cached device blocks, one query
+costs O(R-blocks) device dispatches — not O(R-blocks x S-blocks):
+
+  * BF / IIB: ``build`` stacks the cached S blocks (and, for IIB, their
+    tile-inverted indexes) into ``(num_blocks, ...)`` batched device
+    arrays, and the whole S loop of one R block runs as a single jitted
+    ``lax.scan`` carrying the TopKState — one dispatch, zero per-pair host
+    syncs (the only sync left is pulling the R block's final top-k).
+  * IIB kernel path (``use_kernel``): the S blocks' dense dim-tiles are
+    stacked at build time and one fused Pallas kernel (kernels/knn_topk)
+    streams them through the tile-skipping matmul, maintaining the per-row
+    top-k in VMEM across the S grid axis — block score matrices never
+    round-trip HBM.
+  * IIIB still rebuilds its threshold-dependent refinement per (B_r, B_s)
+    pair — the threshold is the live MinPruneScore — but the threshold now
+    stays ON DEVICE (the builder reads it from the carried TopKState); the
+    host only syncs it once per R block, to size the static ``max_rows``
+    bound, instead of once per pair.
+
+``JoinStats.device_dispatches`` / ``host_syncs`` make the dispatch shape
+observable (``benchmarks/run.py --smoke`` asserts it).
 
 ``knn_join`` (core/blocknl.py) and ``ring_knn_join`` (core/ring.py) are
 thin compat wrappers over this engine and return results identical to the
-pre-engine implementations.
+pre-engine implementations.  The wrappers use streaming mode
+(``cache_device_blocks=False``): no stacks are built and the legacy
+per-pair loop runs with O(block) device memory — also the reference the
+scanned driver is tested against.
 """
 from __future__ import annotations
 
@@ -39,11 +58,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import iiib as iiib_mod
-from repro.core.bf import bf_block_scores, bf_join_block
-from repro.core.iib import iib_join_block
+from repro.core.bf import bf_block_scores, bf_join_block, bf_scan_join
+from repro.core.iib import iib_join_block, iib_scan_join
 from repro.core.index import (
     DEFAULT_TILE,
-    TileIndex,
     active_tile_list,
     build_tile_index,
     dense_r_tiles,
@@ -71,6 +89,8 @@ class JoinStats:
     rescued_columns: int = 0       # IIIB phase-2 width
     dense_pairs: int = 0           # BF full-score pairs
     index_builds: int = 0          # S-block index constructions (build-once observable)
+    device_dispatches: int = 0     # driver-level device launches (scan/kernel/join steps)
+    host_syncs: int = 0            # device→host materializations on the query path
     build_wall_s: float = 0.0      # time spent inside build()/extend()
     query_wall_s: float = 0.0      # time spent inside query()
 
@@ -86,6 +106,7 @@ class JoinSpec:
     tile: int = DEFAULT_TILE
     use_kernel: bool = False            # IIB: route scoring through the Pallas kernel
     warm_start: float = 0.0             # IIIB: S-sample fraction seeding MinPruneScore
+    seed: int = 0                       # warm-start sampler seed (vary across a stream)
 
     def __post_init__(self):
         if self.algorithm not in (None, "bf", "iib", "iiib"):
@@ -227,6 +248,15 @@ def _host_tile_any(block: SparseBatch, tile: int, t_total: int, rank: Optional[n
     return out[:t_total]
 
 
+def _host_row_occupancy(idx: np.ndarray, dim: int, tile: int) -> np.ndarray:
+    """(N, T) bool — per-row dim-tile occupancy, computed host-side (numpy)."""
+    t_total = num_tiles(dim, tile)
+    tid = np.where(idx < dim, idx // tile, t_total)
+    occ = np.zeros((idx.shape[0], t_total + 1), dtype=bool)
+    occ[np.arange(idx.shape[0])[:, None], tid] = True
+    return occ[:, :t_total]
+
+
 def _pad_feature_axis(idx: np.ndarray, val: np.ndarray, f: int, dim: int):
     """Widen (N, F') feature arrays to F columns with sentinel padding."""
     pad = f - idx.shape[1]
@@ -256,31 +286,80 @@ def _device_batch(host: SparseBatch) -> SparseBatch:
     )
 
 
+def _interpret_kernels() -> bool:
+    """Pallas kernels compile to Mosaic on TPU; elsewhere (CPU tests, this
+    container) they run under interpret mode.  Queried lazily so importing
+    this module never initializes jax device state."""
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# cached S-side stacks (built once, scanned every query)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _BFStack:
+    """All cached S blocks as one batched device array set (BF scan xs)."""
+
+    idx: jax.Array      # (B, s_block, F) int32
+    val: jax.Array      # (B, s_block, F) f32
+    nnz: jax.Array      # (B, s_block) int32
+    starts: jax.Array   # (B,) int32
+    valid: jax.Array    # (B, s_block) bool
+
+
+@dataclasses.dataclass
+class _IIBStack:
+    """All cached per-block tile indexes, stacked (IIB scan xs)."""
+
+    rows: jax.Array     # (B, T+1, M) int32
+    vals: jax.Array     # (B, T+1, M, tile) f32
+    counts: jax.Array   # (B, T+1) int32
+    starts: jax.Array   # (B,) int32
+    valid: jax.Array    # (B, s_block) bool
+    max_rows: int       # common static M (max over blocks, bucketed)
+
+
+@dataclasses.dataclass
+class _KernelStack:
+    """Dense dim-tiles of ALL cached S blocks for the fused knn_topk kernel."""
+
+    s_tiles: jax.Array    # (T+1, NS_pad, tile) f32 — sentinel tile last
+    s_occ: np.ndarray     # (NS_pad, T) bool — host, feeds active_lists
+    col_valid: jax.Array  # (1, NS_pad) int32
+    col_ids: jax.Array    # (1, NS_pad) int32 — global S ids per stacked column
+    block_s: int          # kernel S-axis block (NS_pad % block_s == 0)
+
+
 @dataclasses.dataclass
 class _SBlock:
-    """One cached S block: host mirror, optional device batch + reusable index."""
+    """One cached S block: host mirror plus optional per-block device batch."""
 
     host: SparseBatch             # numpy mirror (host-side threshold bounds)
     valid: np.ndarray             # (s_block,) bool
     start: int                    # global row offset
-    batch: Optional[SparseBatch] = None      # device copy (None when streaming)
-    tile_index: Optional[TileIndex] = None   # IIB: threshold-free, built once
-    list_total: int = 0           # Σ list lengths of tile_index
+    batch: Optional[SparseBatch] = None   # device copy (IIIB cached mode only)
+    list_total: int = 0           # Σ list lengths of the block's IIB index
+    bound: int = 0                # host max_rows bound (IIB stacking)
 
 
 class SparseKNNIndex:
     """Build-once/query-many index over the inner join set S.
 
-    ``build`` pays S-side preprocessing once (block padding, host mirrors,
-    dim statistics, and — for IIB — the per-block tile indexes); every
-    ``query`` then streams an R batch against the cached structures, so a
-    query stream costs O(S-blocks) index builds total instead of
-    O(queries x S-blocks).
+    ``build`` pays S-side preprocessing once: block padding, host mirrors,
+    dim statistics, and the batched device stacks the scanned query driver
+    consumes (for BF the padded-CSR blocks; for IIB the per-block
+    tile-inverted indexes; for the kernel path the dense dim-tiles — IIIB
+    instead caches per-block device batches for its host-orchestrated
+    refinement).  Every ``query`` then streams an R batch against the
+    cached structures in O(R-blocks) device dispatches, and a query stream
+    costs O(S-blocks) index builds total instead of O(queries x S-blocks).
 
     ``cache_device_blocks=False`` keeps only the host mirrors resident and
     materializes each S block (and, for IIB, its tile index) on the fly per
-    query — the legacy streaming memory profile, O(block) device memory
-    instead of O(n_s).  The one-shot ``knn_join`` wrapper uses this mode.
+    (B_r, B_s) pair — the legacy streaming memory profile, O(block) device
+    memory instead of O(n_s), driven by the legacy per-pair loop.  The
+    one-shot ``knn_join`` wrapper uses this mode.
     """
 
     def __init__(self, S: SparseBatch, spec: JoinSpec, cache_device_blocks: bool = True):
@@ -311,6 +390,9 @@ class SparseKNNIndex:
         self.s_block = max(1, min(spec.s_block or p.s_block, self.n_s))
 
         self._blocks: List[_SBlock] = []
+        self._bf_stack: Optional[_BFStack] = None
+        self._iib_stack: Optional[_IIBStack] = None
+        self._kernel_stack: Optional[_KernelStack] = None
         self._build_blocks(from_block=0)
         self.stats.build_wall_s += time.perf_counter() - t0
 
@@ -327,7 +409,9 @@ class SparseKNNIndex:
 
         Equivalent to building from the row-concatenation of the old and new
         S (block geometry is fixed at build time, so only the block holding
-        the old tail — if partial — plus the new blocks change).
+        the old tail — if partial — plus the new blocks change).  Stacked
+        device arrays are re-assembled by concatenation: the retained prefix
+        of the IIB index stack is padded, never rebuilt.
         """
         if S_new.dim != self.dim:
             raise ValueError(f"dim mismatch: index has {self.dim}, got {S_new.dim}")
@@ -365,6 +449,7 @@ class SparseKNNIndex:
         del self._blocks[from_block:]
         for start in range(from_block * self.s_block, self.n_s, self.s_block):
             self._blocks.append(self._make_block(start))
+        self._build_stacks(from_block)
 
     def _make_block(self, start: int) -> _SBlock:
         stop = min(start + self.s_block, self.n_s)
@@ -375,14 +460,125 @@ class SparseKNNIndex:
         host = SparseBatch(indices=idx, values=val, nnz=nnz, dim=self.dim)
         blk = _SBlock(host=host, valid=valid, start=start)
         if self._cache_device:
-            blk.batch = _device_batch(host)
-            if self.algorithm == "iib" and not self.spec.use_kernel:
-                # threshold-free: build once here, reuse across every query
-                m = max_rows_bound(host, self.tile)
-                blk.tile_index = _build_index_iib(blk.batch, max_rows=m, tile=self.tile)
-                blk.list_total = int(np.asarray(blk.tile_index.counts).sum())
-                self.stats.index_builds += 1
+            if self.algorithm == "iiib":
+                # per-pair refinement loop reads the cached device batch
+                blk.batch = _device_batch(host)
+            elif self.algorithm == "iib" and not self.spec.use_kernel:
+                # the stacked-index max_rows bound (host, cheap) — the index
+                # itself is built into the stack, not per block
+                blk.bound = max_rows_bound(host, self.tile)
         return blk
+
+    # -- batched device stacks ----------------------------------------------
+
+    def _build_stacks(self, from_block: int):
+        if not self._cache_device:
+            return
+        if self.algorithm == "bf":
+            self._bf_stack = self._stack_bf()
+        elif self.algorithm == "iib":
+            if self.spec.use_kernel:
+                self._kernel_stack = self._stack_kernel()
+            else:
+                self._iib_stack = self._stack_iib(from_block)
+        # iiib: threshold-dependent — nothing cacheable beyond the per-block
+        # device batches (_make_block)
+
+    def _stack_starts_valid(self) -> Tuple[jax.Array, jax.Array]:
+        b, sb = len(self._blocks), self.s_block
+        starts = np.arange(b, dtype=np.int32) * sb
+        valid = (np.arange(b * sb) < self.n_s).reshape(b, sb)
+        return jnp.asarray(starts), jnp.asarray(valid)
+
+    def _stack_bf(self) -> _BFStack:
+        """Stack the padded-CSR blocks: (B, s_block, F) device arrays."""
+        b, sb, f = len(self._blocks), self.s_block, self._idx.shape[1]
+        idx = np.full((b * sb, f), self.dim, self._idx.dtype)
+        val = np.zeros((b * sb, f), self._val.dtype)
+        nnz = np.zeros((b * sb,), self._nnz.dtype)
+        idx[: self.n_s] = self._idx
+        val[: self.n_s] = self._val
+        nnz[: self.n_s] = self._nnz
+        starts, valid = self._stack_starts_valid()
+        return _BFStack(
+            idx=jnp.asarray(idx.reshape(b, sb, f)),
+            val=jnp.asarray(val.reshape(b, sb, f)),
+            nnz=jnp.asarray(nnz.reshape(b, sb)),
+            starts=starts, valid=valid,
+        )
+
+    def _stack_iib(self, from_block: int) -> _IIBStack:
+        """Stack per-block tile indexes with one common ``max_rows``.
+
+        Incremental: on ``extend`` the retained prefix of the old stack is
+        only PADDED to the new bound (sentinel rows, zero values — a pad is
+        not a rebuild and is not counted in ``index_builds``); fresh indexes
+        are built for the tail blocks alone.
+        """
+        sb, tile = self.s_block, self.tile
+        old = self._iib_stack if from_block > 0 else None
+        tail = self._blocks[from_block:]
+        m = max([blk.bound for blk in tail] + ([old.max_rows] if old else [1]))
+        parts_r, parts_v, parts_c = [], [], []
+        if old is not None:
+            pr = old.rows[:from_block]
+            pv = old.vals[:from_block]
+            pc = old.counts[:from_block]
+            if m > old.max_rows:
+                pad = m - old.max_rows
+                pr = jnp.concatenate(
+                    [pr, jnp.full(pr.shape[:2] + (pad,), sb, jnp.int32)], axis=2
+                )
+                pv = jnp.concatenate(
+                    [pv, jnp.zeros(pv.shape[:2] + (pad, tile), jnp.float32)], axis=2
+                )
+            parts_r.append(pr)
+            parts_v.append(pv)
+            parts_c.append(pc)
+        for blk in tail:
+            batch = blk.batch if blk.batch is not None else _device_batch(blk.host)
+            ti = _build_index_iib(batch, max_rows=m, tile=tile)
+            self.stats.index_builds += 1
+            blk.list_total = int(np.asarray(ti.counts).sum())
+            parts_r.append(ti.rows[None])
+            parts_v.append(ti.vals[None])
+            parts_c.append(ti.counts[None])
+        starts, valid = self._stack_starts_valid()
+        return _IIBStack(
+            rows=jnp.concatenate(parts_r, axis=0),
+            vals=jnp.concatenate(parts_v, axis=0),
+            counts=jnp.concatenate(parts_c, axis=0),
+            starts=starts, valid=valid, max_rows=m,
+        )
+
+    def _stack_kernel(self) -> _KernelStack:
+        """Stack dense dim-tiles of all S blocks for the fused kernel."""
+        ns = len(self._blocks) * self.s_block
+        bs_k = 256 if ns >= 256 else -(-ns // 8) * 8
+        ns_pad = -(-ns // bs_k) * bs_k
+        f = self._idx.shape[1]
+        idx = np.full((ns_pad, f), self.dim, np.int32)
+        val = np.zeros((ns_pad, f), np.float32)
+        nnz = np.zeros(ns_pad, np.int32)
+        idx[: self.n_s] = self._idx
+        val[: self.n_s] = self._val
+        nnz[: self.n_s] = self._nnz
+        from repro.kernels.knn_score.ops import dense_tiles_with_sentinel
+
+        big = SparseBatch(
+            indices=jnp.asarray(idx), values=jnp.asarray(val),
+            nnz=jnp.asarray(nnz), dim=self.dim,
+        )
+        s_tiles = dense_tiles_with_sentinel(big, self.tile)  # (T+1, NS_pad, tile)
+        col_valid = (np.arange(ns_pad) < self.n_s).astype(np.int32)
+        col_ids = np.where(col_valid > 0, np.arange(ns_pad, dtype=np.int32), -1)
+        return _KernelStack(
+            s_tiles=s_tiles,
+            s_occ=_host_row_occupancy(idx, self.dim, self.tile),
+            col_valid=jnp.asarray(col_valid[None, :]),
+            col_ids=jnp.asarray(col_ids[None, :]),
+            block_s=bs_k,
+        )
 
     # -- introspection ------------------------------------------------------
 
@@ -430,11 +626,12 @@ class SparseKNNIndex:
     def query(self, R: SparseBatch, stats: Optional[JoinStats] = None) -> JoinResult:
         """R ⋈_KNN S against the cached structures.  Returns global S ids.
 
-        The R-block loop is the paper's Algorithm 1 outer loop; the S-block
-        loop streams the *cached* blocks.  BF scores densely; IIB scores via
-        the cached per-block tile index (zero builds per query); IIIB rebuilds
-        only its threshold-dependent refinement per pair (MinPruneScore is
-        live state) on top of the cached device block + host mirror.
+        The R-block loop is the paper's Algorithm 1 outer loop.  With cached
+        device stacks the whole S side of one R block is ONE device dispatch
+        (a ``lax.scan`` for BF/IIB, the fused knn_topk kernel for the kernel
+        path); streaming mode falls back to the legacy per-pair loop.  IIIB
+        is per-pair either way (the refinement threshold is live state), but
+        cached mode syncs the threshold to host only once per R block.
         """
         t_q = time.perf_counter()
         stats = stats if stats is not None else JoinStats()
@@ -448,12 +645,14 @@ class SparseKNNIndex:
         sb = self.s_block
         tile = self.tile
         t_total = num_tiles(self.dim, tile)
+        cached = self._cache_device
 
         sampled_ids = None
         sampled_mask = None
+        sample_block = None
         if spec.warm_start > 0 and algorithm == "iiib":
             m = max(int(n_s * spec.warm_start), k)
-            rng = np.random.default_rng(0)
+            rng = np.random.default_rng(spec.seed)
             sampled_ids = np.sort(rng.choice(n_s, size=min(m, n_s), replace=False))
             sampled_mask = np.zeros(n_s, bool)
             sampled_mask[sampled_ids] = True
@@ -474,97 +673,40 @@ class SparseKNNIndex:
                 sc = bf_block_scores(br, sample_block)
                 state = topk_update(state, sc, jnp.asarray(sampled_ids, jnp.int32))
                 stats.dense_pairs += rb * len(sampled_ids)
+                stats.device_dispatches += 1
 
-            if algorithm == "iib":
-                # R-side active tiles (host, concrete) — true tile skipping
-                occ_any = _host_tile_any(br, tile, t_total)
-                tiles = jnp.asarray(active_tile_list(occ_any))
-                r_tiles = dense_r_tiles(br, None, tile)
-            elif algorithm == "iiib":
+            if algorithm == "bf":
+                if cached:
+                    state = self._query_bf_scanned(state, br, stats, rb)
+                else:
+                    state = self._query_pairs(state, br, None, None, stats, rb, None)
+            elif algorithm == "iib":
+                if spec.use_kernel and cached:
+                    # the fused kernel derives its own (r-block, s-block)
+                    # active lists from row occupancy
+                    state = self._query_fused_kernel(state, br, stats, rb)
+                else:
+                    # R-side active tiles (host, concrete) — true tile skipping
+                    occ_any = _host_tile_any(br, tile, t_total)
+                    tiles = jnp.asarray(active_tile_list(occ_any))
+                    if cached:
+                        r_tiles = dense_r_tiles(br, None, tile)
+                        state = self._query_iib_scanned(state, r_tiles, tiles, stats)
+                    else:
+                        r_tiles = None if spec.use_kernel else dense_r_tiles(br, None, tile)
+                        state = self._query_pairs(state, br, r_tiles, tiles, stats, rb, None)
+            else:  # iiib — threshold-dependent refinement rebuilt per pair
                 rank, maxw, r_tiles = iiib_mod.prepare_r_block(br, tile)
                 rank_np = np.asarray(rank)
                 maxw_np = np.asarray(maxw)
                 occ_any = _host_tile_any(br, tile, t_total, rank_np)
                 tiles = jnp.asarray(active_tile_list(occ_any))
-
-            for blk in self._blocks:
-                s0 = blk.start
-                # streaming mode: the device copy is transient, per pair
-                bs = blk.batch if blk.batch is not None else _device_batch(blk.host)
-                if sampled_mask is not None:
-                    # sampled rows were already offered in the warm-start pass
-                    in_block = np.zeros(sb, bool)
-                    hi = min(s0 + sb, n_s)
-                    in_block[: hi - s0] = sampled_mask[s0:hi]
-                    s_valid_np = blk.valid & ~in_block
-                else:
-                    s_valid_np = blk.valid
-                s_valid = jnp.asarray(s_valid_np)
-                s_off = jnp.int32(s0)
-                stats.blocks += 1
-
-                if algorithm == "bf":
-                    state = _bf_step(state, br, bs, s_off, s_valid)
-                    stats.dense_pairs += rb * sb
-
-                elif algorithm == "iib":
-                    if spec.use_kernel:
-                        # Pallas tile-skipping kernel path (block-sparse scoring)
-                        from repro.kernels.knn_score.ops import knn_score as _ks
-
-                        scores = _ks(br, bs, tile=tile, block_r=min(256, rb), block_s=min(256, sb))
-                        ids = s_off + jnp.arange(sb, dtype=jnp.int32)
-                        masked = jnp.where((scores > 0.0) & s_valid[None, :], scores, -jnp.inf)
-                        state = topk_update(state, masked, ids)
-                        stats.tiles_scored += int(tiles.shape[0])
-                    else:
-                        index = blk.tile_index
-                        if index is None:  # streaming mode: rebuilt per pair
-                            m = max_rows_bound(blk.host, tile)
-                            index = _build_index_iib(bs, max_rows=m, tile=tile)
-                            stats.index_builds += 1
-                            self.stats.index_builds += 1
-                            entries = int(np.asarray(index.counts).sum())
-                        else:
-                            entries = blk.list_total
-                        state = iib_join_block(
-                            state, r_tiles, index, tiles, s_off, s_valid
-                        )
-                        stats.tiles_scored += int(tiles.shape[0])
-                        stats.list_entries += entries
-
-                else:  # iiib — threshold-dependent refinement rebuilt per pair
-                    mps = float(np.asarray(min_prune_score(state)))
-                    m = max_rows_bound(
-                        blk.host, tile, rank=rank_np, maxw=maxw_np, min_prune_score=mps
-                    )
-                    index = _build_index_iiib(
-                        bs, max_rows=m, tile=tile, rank=rank, maxw=maxw,
-                        min_prune_score=jnp.float32(mps) if mps != -np.inf else jnp.float32(-np.inf),
-                    )
-                    stats.index_builds += 1
-                    self.stats.index_builds += 1
-                    scores, prune = iiib_mod.indexed_scores_block(state, r_tiles, index, tiles)
-                    # rows already fully indexed: their A is exact — merge directly
-                    state = iiib_mod.offer_fully_indexed(
-                        state, scores, index.pref_ub, s_off, s_valid
-                    )
-                    # candidate rescue for rows with an unindexed prefix
-                    # (masked columns — padding or warm-start-sampled — excluded)
-                    cand = iiib_mod.candidate_columns(
-                        np.where(s_valid_np[None, :], np.asarray(scores), 0.0),
-                        np.asarray(index.pref_ub), np.asarray(prune),
-                    )
-                    if (cand < sb).any():
-                        state = iiib_mod.rescue(
-                            state, br, bs, jnp.asarray(cand), s_off, num_cand=len(cand)
-                        )
-                    stats.tiles_scored += int(tiles.shape[0])
-                    stats.list_entries += int(np.asarray(index.counts).sum())
-                    stats.rescued_columns += int((cand < sb).sum())
+                iiib_ctx = (rank, maxw, rank_np, maxw_np, sampled_mask)
+                state = self._query_pairs(state, br, r_tiles, tiles, stats, rb, iiib_ctx)
 
             out_scores.append(np.asarray(state.scores)[r_valid])
             out_ids.append(np.asarray(state.ids)[r_valid])
+            stats.host_syncs += 1                          # the R block's result pull
 
         dt = time.perf_counter() - t_q
         stats.query_wall_s += dt
@@ -574,6 +716,174 @@ class SparseKNNIndex:
             ids=jnp.asarray(np.concatenate(out_ids)),
             stats=stats,
         )
+
+    # -- scanned drivers (cached mode: one dispatch per R block) -------------
+
+    def _query_bf_scanned(self, state, br, stats, rb):
+        st = self._bf_stack
+        b = len(self._blocks)
+        state = bf_scan_join(
+            state, br, st.idx, st.val, st.nnz, st.starts, st.valid, dim=self.dim
+        )
+        stats.device_dispatches += 1
+        stats.blocks += b
+        stats.dense_pairs += rb * self.s_block * b
+        return state
+
+    def _query_iib_scanned(self, state, r_tiles, tiles, stats):
+        st = self._iib_stack
+        b = len(self._blocks)
+        state = iib_scan_join(
+            state, r_tiles, tiles, st.rows, st.vals, st.counts, st.starts, st.valid,
+            tile=self.tile, num_s=self.s_block,
+        )
+        stats.device_dispatches += 1
+        stats.blocks += b
+        stats.tiles_scored += int(tiles.shape[0]) * b
+        stats.list_entries += sum(blk.list_total for blk in self._blocks)
+        return state
+
+    def _query_fused_kernel(self, state, br, stats, rb):
+        """One fused score→top-k kernel call covers every S block: scores
+        stream tile-by-tile through VMEM, never materializing in HBM."""
+        from repro.kernels.knn_score.ops import _pad_rows, active_lists, dense_tiles_with_sentinel
+        from repro.kernels.knn_topk.kernel import knn_topk_pallas
+        from repro.kernels.knn_topk.ops import pad_state
+
+        ks = self._kernel_stack
+        br_k = 256 if rb >= 256 else -(-rb // 8) * 8
+        r_tiles = _pad_rows(dense_tiles_with_sentinel(br, self.tile), br_k)
+        r_occ = _host_row_occupancy(np.asarray(br.indices), self.dim, self.tile)
+        active = jnp.asarray(active_lists(r_occ, ks.s_occ, br_k, ks.block_s))
+        init_s, init_i = pad_state(state, r_tiles.shape[1])
+        out_s, out_i = knn_topk_pallas(
+            r_tiles, ks.s_tiles, active, ks.col_valid, ks.col_ids, init_s, init_i,
+            block_r=br_k, block_s=ks.block_s, interpret=_interpret_kernels(),
+        )
+        stats.device_dispatches += 1
+        stats.blocks += len(self._blocks)
+        t_total = num_tiles(self.dim, self.tile)
+        stats.tiles_scored += int((np.asarray(active) < t_total).sum())
+        return TopKState(scores=out_s[:rb], ids=out_i[:rb])
+
+    # -- per-pair loop (streaming mode; IIIB in every mode) ------------------
+
+    def _query_pairs(self, state, br, r_tiles, tiles, stats, rb, iiib_ctx):
+        """The legacy Algorithm-1 inner loop: one step per (B_r, B_s) pair.
+
+        Streaming mode drives BF/IIB through here with transient device
+        blocks (O(block) device memory).  IIIB always lands here — its index
+        is threshold-dependent — but with cached blocks the MinPruneScore
+        host sync happens ONCE per R block (sizing the static max_rows
+        bound); the index builder itself reads the live threshold from the
+        carried state, on device.
+        """
+        spec = self.spec
+        algorithm = self.algorithm
+        sb = self.s_block
+        n_s = self.n_s
+        tile = self.tile
+        cached = self._cache_device
+
+        if iiib_ctx is not None:
+            rank, maxw, rank_np, maxw_np, sampled_mask = iiib_ctx
+            if cached:
+                # the one host sync of the R block: a concrete threshold to
+                # size max_rows (a static shape).  Stale for later pairs —
+                # the TRUE threshold only rises, so lists only shrink and
+                # the bound stays valid; the builder uses the live value.
+                mps_host = float(np.asarray(min_prune_score(state)))
+                stats.host_syncs += 1
+        else:
+            sampled_mask = None
+
+        for blk in self._blocks:
+            s0 = blk.start
+            # streaming mode: the device copy is transient, per pair
+            bs = blk.batch if blk.batch is not None else _device_batch(blk.host)
+            if sampled_mask is not None:
+                # sampled rows were already offered in the warm-start pass
+                in_block = np.zeros(sb, bool)
+                hi = min(s0 + sb, n_s)
+                in_block[: hi - s0] = sampled_mask[s0:hi]
+                s_valid_np = blk.valid & ~in_block
+            else:
+                s_valid_np = blk.valid
+            s_valid = jnp.asarray(s_valid_np)
+            s_off = jnp.int32(s0)
+            stats.blocks += 1
+
+            if algorithm == "bf":
+                state = _bf_step(state, br, bs, s_off, s_valid)
+                stats.dense_pairs += rb * sb
+                stats.device_dispatches += 1
+
+            elif algorithm == "iib":
+                if spec.use_kernel:
+                    # fused score→top-k kernel, one pair at a time (the
+                    # streaming counterpart of _query_fused_kernel)
+                    from repro.kernels.knn_topk.ops import knn_topk as _fused
+
+                    state = _fused(
+                        br, bs, state=state, s_offset=s0, s_valid=s_valid_np,
+                        tile=tile, block_r=min(256, rb), block_s=min(256, sb),
+                        interpret=_interpret_kernels(),
+                    )
+                    stats.tiles_scored += int(tiles.shape[0])
+                    stats.device_dispatches += 1
+                else:
+                    m = max_rows_bound(blk.host, tile)
+                    index = _build_index_iib(bs, max_rows=m, tile=tile)
+                    stats.index_builds += 1
+                    self.stats.index_builds += 1
+                    entries = int(np.asarray(index.counts).sum())
+                    stats.host_syncs += 1
+                    state = iib_join_block(
+                        state, r_tiles, index, tiles, s_off, s_valid
+                    )
+                    stats.tiles_scored += int(tiles.shape[0])
+                    stats.list_entries += entries
+                    stats.device_dispatches += 2
+
+            else:  # iiib — threshold-dependent refinement rebuilt per pair
+                if cached:
+                    thr = min_prune_score(state)          # live, on device
+                else:
+                    mps_host = float(np.asarray(min_prune_score(state)))
+                    stats.host_syncs += 1
+                    thr = jnp.float32(mps_host)
+                m = max_rows_bound(
+                    blk.host, tile, rank=rank_np, maxw=maxw_np,
+                    min_prune_score=mps_host,
+                )
+                index = _build_index_iiib(
+                    bs, max_rows=m, tile=tile, rank=rank, maxw=maxw,
+                    min_prune_score=thr,
+                )
+                stats.index_builds += 1
+                self.stats.index_builds += 1
+                scores, prune = iiib_mod.indexed_scores_block(state, r_tiles, index, tiles)
+                # rows already fully indexed: their A is exact — merge directly
+                state = iiib_mod.offer_fully_indexed(
+                    state, scores, index.pref_ub, s_off, s_valid
+                )
+                stats.device_dispatches += 3
+                # candidate rescue for rows with an unindexed prefix
+                # (masked columns — padding or warm-start-sampled — excluded)
+                cand = iiib_mod.candidate_columns(
+                    np.where(s_valid_np[None, :], np.asarray(scores), 0.0),
+                    np.asarray(index.pref_ub), np.asarray(prune),
+                )
+                stats.host_syncs += 1
+                if (cand < sb).any():
+                    state = iiib_mod.rescue(
+                        state, br, bs, jnp.asarray(cand), s_off, num_cand=len(cand)
+                    )
+                    stats.device_dispatches += 1
+                stats.tiles_scored += int(tiles.shape[0])
+                stats.list_entries += int(np.asarray(index.counts).sum())
+                stats.rescued_columns += int((cand < sb).sum())
+        return state
 
 
 # ---------------------------------------------------------------------------

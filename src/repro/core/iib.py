@@ -35,3 +35,38 @@ def iib_join_block(
     valid = (scores > 0.0) & s_valid[None, :]
     scores = jnp.where(valid, scores, -jnp.inf)
     return topk_update(state, scores, ids)
+
+
+@partial(jax.jit, static_argnames=("tile", "num_s"))
+def iib_scan_join(
+    state: TopKState,
+    r_tiles: jax.Array,        # (T, |Br|, tile)
+    active_tiles: jax.Array,   # (A,) int32, sentinel-padded (shared by all blocks)
+    s_rows: jax.Array,         # (B, T+1, M) int32 — stacked per-block tile lists
+    s_vals: jax.Array,         # (B, T+1, M, tile) f32
+    s_counts: jax.Array,       # (B, T+1) int32
+    s_starts: jax.Array,       # (B,) int32
+    s_valid: jax.Array,        # (B, num_s) bool
+    tile: int,
+    num_s: int,
+) -> TopKState:
+    """IIB inner loop over ALL stacked per-block tile indexes as one scan.
+
+    The indexes are threshold-free (pref_ub == 0, crossing == 0), built
+    once at ``SparseKNNIndex.build`` time with a common ``max_rows`` bound
+    so the whole datastore is one ``(B, T+1, M[, tile])`` array set — one
+    dispatch per R block, zero per-pair host syncs.
+    """
+    pref_ub = jnp.zeros((num_s,), jnp.float32)
+    crossing = jnp.zeros((num_s,), jnp.int32)
+
+    def body(st, xs):
+        rows, vals, counts, off, vm = xs
+        index = TileIndex(
+            rows=rows, vals=vals, counts=counts, pref_ub=pref_ub,
+            crossing=crossing, tile=tile, num_s=num_s,
+        )
+        return iib_join_block(st, r_tiles, index, active_tiles, off, vm), None
+
+    state, _ = jax.lax.scan(body, state, (s_rows, s_vals, s_counts, s_starts, s_valid))
+    return state

@@ -61,6 +61,16 @@ def topk_update(state: TopKState, new_scores: jax.Array, new_ids: jax.Array) -> 
     return TopKState(scores=top_scores, ids=top_ids)
 
 
+def pad_topk_state(state: TopKState, n_pad: int) -> TopKState:
+    """Pad to ``n_pad`` rows with empty (-inf, -1) slots (kernel block plumbing)."""
+    n, k = state.scores.shape
+    scores = jnp.full((n_pad, k), NEG_INF, jnp.float32).at[:n].set(
+        state.scores.astype(jnp.float32)
+    )
+    ids = jnp.full((n_pad, k), -1, jnp.int32).at[:n].set(state.ids.astype(jnp.int32))
+    return TopKState(scores=scores, ids=ids)
+
+
 def prune_scores(state: TopKState) -> jax.Array:
     """(N,) — pruneScore(r): the k-th best score so far (−inf if < k seen)."""
     return state.scores[:, -1]

@@ -45,26 +45,33 @@ def active_lists(
     Host-side: the list lengths are data-dependent (this is the point — the
     kernel's work is proportional to them), so they are materialized
     concretely and bucketed to bound recompilation.
+
+    Fully vectorized: one block-level any-reduce per side, one broadcast
+    intersection, and a stable argsort to pack the occupied tile ids to the
+    front of each list (ascending, exactly the nonzero order).  The former
+    pure-Python O(nR·nS·T) nested loop dominated setup for large block
+    grids.
     """
     t_total = r_occ.shape[1]
-    n_rb = -(-r_occ.shape[0] // block_r)
-    n_sb = -(-s_occ.shape[0] // block_s)
-    lists = []
-    max_len = 1
-    for i in range(n_rb):
-        row = []
-        r_any = r_occ[i * block_r : (i + 1) * block_r].any(axis=0)
-        for j in range(n_sb):
-            s_any = s_occ[j * block_s : (j + 1) * block_s].any(axis=0)
-            (tiles,) = np.nonzero(r_any & s_any)
-            row.append(tiles)
-            max_len = max(max_len, len(tiles))
-        lists.append(row)
-    a_len = -(-max_len // bucket) * bucket
-    out = np.full((n_rb, n_sb, a_len), t_total, dtype=np.int32)
-    for i in range(n_rb):
-        for j in range(n_sb):
-            out[i, j, : len(lists[i][j])] = lists[i][j]
+
+    def block_any(occ: np.ndarray, block: int) -> np.ndarray:
+        n_blocks = -(-occ.shape[0] // block)
+        padded = np.zeros((n_blocks * block, t_total), dtype=bool)
+        padded[: occ.shape[0]] = occ
+        return padded.reshape(n_blocks, block, t_total).any(axis=1)
+
+    r_any = block_any(r_occ, block_r)                       # (nR, T)
+    s_any = block_any(s_occ, block_s)                       # (nS, T)
+    both = r_any[:, None, :] & s_any[None, :, :]            # (nR, nS, T)
+    counts = both.sum(axis=-1)                              # (nR, nS)
+    a_len = -(-max(int(counts.max(initial=1)), 1) // bucket) * bucket
+    # stable argsort on ~both packs occupied tiles first, ascending tile id
+    packed = np.argsort(~both, axis=-1, kind="stable").astype(np.int32)
+    slot = np.arange(t_total, dtype=np.int32)
+    packed = np.where(slot[None, None, :] < counts[..., None], packed, t_total)
+    out = np.full((both.shape[0], both.shape[1], a_len), t_total, dtype=np.int32)
+    w = min(a_len, t_total)
+    out[:, :, :w] = packed[:, :, :w]
     return out
 
 

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for knn_topk: materialize-then-merge.
+
+Exactly the path the fused kernel replaces — the full score matrix via
+``knn_score_ref``, then one concat + ``lax.top_k`` merge per S block
+(``topk_merge_ref`` == ``core.topk.topk_update``).  The fused kernel must
+reproduce its scores AND ids bit-for-bit (ties resolve identically: the
+insertion body favours incumbents, top_k on a [state, candidates] concat
+favours earlier columns).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.knn_score.ref import knn_score_ref
+from repro.kernels.topk_merge.ref import topk_merge_ref
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+def knn_topk_ref(
+    r_tiles: jax.Array,    # (T+1, NR, tile)
+    s_tiles: jax.Array,    # (T+1, NS, tile)
+    active: jax.Array,     # (nR, nS, A)
+    s_valid: jax.Array,    # (1, NS) int32
+    s_ids: jax.Array,      # (1, NS) int32
+    init_scores: jax.Array,  # (NR, k)
+    init_ids: jax.Array,     # (NR, k)
+    block_r: int = 256,
+    block_s: int = 256,
+):
+    n_r = r_tiles.shape[1]
+    n_s = s_tiles.shape[1]
+    scores = knn_score_ref(r_tiles, s_tiles, active, block_r=block_r, block_s=block_s)
+    valid = s_valid[0] > 0
+    masked = jnp.where((scores > 0.0) & valid[None, :], scores, NEG_INF)
+    st_s, st_i = init_scores, init_ids
+    for j0 in range(0, n_s, block_s):
+        chunk = masked[:, j0 : j0 + block_s]
+        ids = jnp.broadcast_to(s_ids[0, j0 : j0 + block_s][None, :], chunk.shape)
+        st_s, st_i = topk_merge_ref(st_s, st_i, chunk, ids)
+    return st_s, st_i

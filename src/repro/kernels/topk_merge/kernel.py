@@ -23,6 +23,32 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def insert_candidates(state_scores, state_ids, cand_scores, cand_ids):
+    """(rows, k) state ⊕ (rows, M) candidates via M insertion passes.
+
+    The shared merge body: used here as the whole kernel and by the fused
+    score→top-k kernel (kernels/knn_topk) as its per-S-block epilogue.
+    Plain arrays in, plain arrays out — callable from any kernel (or traced
+    code; it is pure jnp).
+    """
+    k = state_scores.shape[1]
+    m = cand_scores.shape[1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (state_scores.shape[0], k), 1)
+
+    def insert(j, carry):
+        scores, ids = carry
+        cand = cand_scores[:, j][:, None]         # (rows, 1)
+        cid = cand_ids[:, j][:, None]
+        pos = jnp.sum((scores >= cand).astype(jnp.int32), axis=1, keepdims=True)
+        sh_s = jnp.roll(scores, 1, axis=1)
+        sh_i = jnp.roll(ids, 1, axis=1)
+        new_s = jnp.where(lane < pos, scores, jnp.where(lane == pos, cand, sh_s))
+        new_i = jnp.where(lane < pos, ids, jnp.where(lane == pos, cid, sh_i))
+        return new_s, new_i
+
+    return jax.lax.fori_loop(0, m, insert, (state_scores, state_ids))
+
+
 def _merge_kernel(state_s_ref, state_i_ref, cand_s_ref, cand_i_ref, out_s_ref, out_i_ref):
     c = pl.program_id(1)
 
@@ -31,23 +57,8 @@ def _merge_kernel(state_s_ref, state_i_ref, cand_s_ref, cand_i_ref, out_s_ref, o
         out_s_ref[...] = state_s_ref[...]
         out_i_ref[...] = state_i_ref[...]
 
-    k = out_s_ref.shape[1]
-    m = cand_s_ref.shape[1]
-    lane = jax.lax.broadcasted_iota(jnp.int32, (out_s_ref.shape[0], k), 1)
-
-    def insert(j, carry):
-        scores, ids = carry
-        cand = cand_s_ref[:, j][:, None]          # (rows, 1)
-        cid = cand_i_ref[:, j][:, None]
-        pos = jnp.sum((scores >= cand).astype(jnp.int32), axis=1, keepdims=True)
-        sh_s = jnp.roll(scores, 1, axis=1)
-        sh_i = jnp.roll(ids, 1, axis=1)
-        new_s = jnp.where(lane < pos, scores, jnp.where(lane == pos, cand, sh_s))
-        new_i = jnp.where(lane < pos, ids, jnp.where(lane == pos, cid, sh_i))
-        return new_s, new_i
-
-    scores, ids = jax.lax.fori_loop(
-        0, m, insert, (out_s_ref[...], out_i_ref[...])
+    scores, ids = insert_candidates(
+        out_s_ref[...], out_i_ref[...], cand_s_ref[...], cand_i_ref[...]
     )
     out_s_ref[...] = scores
     out_i_ref[...] = ids

@@ -127,6 +127,59 @@ def test_warm_start_via_engine(small_rs):
     _check_oracle(np.asarray(res.scores), osc)
 
 
+@pytest.mark.parametrize("algorithm", ["bf", "iib", "iiib"])
+def test_scanned_driver_matches_per_pair_loop(small_rs, algorithm):
+    """Cached (scanned/fused) driver vs the streaming per-pair loop:
+    identical arrays, and the cached BF/IIB paths dispatch once per R block
+    with no per-pair host syncs (the only sync is the result pull)."""
+    R, S = small_rs
+    spec = JoinSpec(k=5, algorithm=algorithm, r_block=24, s_block=32)
+    scanned, legacy = JoinStats(), JoinStats()
+    res = SparseKNNIndex.build(S, spec).query(R, stats=scanned)
+    res_stream = SparseKNNIndex.build(S, spec, cache_device_blocks=False).query(
+        R, stats=legacy
+    )
+    np.testing.assert_array_equal(np.asarray(res.scores), np.asarray(res_stream.scores))
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(res_stream.ids))
+    r_blocks, s_blocks = 2, 3
+    if algorithm in ("bf", "iib"):
+        assert scanned.device_dispatches == r_blocks          # one scan per R block
+        assert scanned.host_syncs == r_blocks                 # result pulls only
+        assert legacy.device_dispatches >= r_blocks * s_blocks
+    else:  # iiib is per-pair either way, but its threshold sync is hoisted
+        assert scanned.host_syncs < legacy.host_syncs
+
+
+def test_fused_kernel_engine_matches_streaming(small_rs):
+    """use_kernel cached mode: ONE fused knn_topk dispatch per R block,
+    bit-identical to the streaming per-pair kernel path."""
+    R, S = small_rs
+    spec = JoinSpec(k=5, algorithm="iib", r_block=24, s_block=32, use_kernel=True)
+    stats = JoinStats()
+    res = SparseKNNIndex.build(S, spec).query(R, stats=stats)
+    legacy = knn_join(R, S, 5, algorithm="iib", r_block=24, s_block=32, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(res.scores), np.asarray(legacy.scores))
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(legacy.ids))
+    assert stats.device_dispatches == 2                       # == r_blocks
+
+
+def test_warm_start_seed_varies_sample(small_rs):
+    """JoinSpec.seed varies the warm-start sample across a stream; every
+    seed stays exact."""
+    R, S = small_rs
+    osc, _ = oracle_knn(np.asarray(densify(R)), np.asarray(densify(S)), 5)
+    rescued = []
+    for seed in (0, 7):
+        spec = JoinSpec(k=5, algorithm="iiib", r_block=24, s_block=20,
+                        warm_start=0.2, seed=seed)
+        stats = JoinStats()
+        res = SparseKNNIndex.build(S, spec).query(R, stats=stats)
+        _check_oracle(np.asarray(res.scores), osc)
+        rescued.append((stats.dense_pairs, stats.list_entries))
+    # different samples -> different warm-start/refinement work profiles
+    assert rescued[0] != rescued[1]
+
+
 def test_planner_cost_model_ordering():
     """Planner choices track the C2/C3 estimates and respect block bounds."""
     spec = JoinSpec(k=5)

@@ -57,6 +57,25 @@ def test_knn_score_kernel_vs_ref_oracle():
     )
 
 
+def test_active_lists_matches_naive():
+    """The vectorized block-occupancy intersection == the per-pair nonzero
+    scan it replaced (ascending tile ids packed first, sentinel padding)."""
+    rng = np.random.default_rng(11)
+    for nr, ns, br, bs, t in [(70, 90, 64, 64, 5), (33, 100, 16, 24, 17), (8, 8, 8, 8, 1)]:
+        r_occ = rng.random((nr, t)) < 0.3
+        s_occ = rng.random((ns, t)) < 0.3
+        got = active_lists(r_occ, s_occ, br, bs)
+        n_rb, n_sb = -(-nr // br), -(-ns // bs)
+        assert got.shape[:2] == (n_rb, n_sb) and got.shape[2] % 8 == 0
+        for i in range(n_rb):
+            for j in range(n_sb):
+                r_any = r_occ[i * br : (i + 1) * br].any(axis=0)
+                s_any = s_occ[j * bs : (j + 1) * bs].any(axis=0)
+                (tiles,) = np.nonzero(r_any & s_any)
+                np.testing.assert_array_equal(got[i, j, : len(tiles)], tiles)
+                assert (got[i, j, len(tiles):] == t).all()
+
+
 def test_knn_score_skips_dead_tiles():
     """Active lists must be shorter than the full tile count on sparse data
     (this is the C3-vs-C2 win the kernel exists for)."""
