@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test smoke bench
+.PHONY: check test smoke bench bench-compare
 
 # tier-1 verify + engine smoke (index reuse + dispatch shape observable on CPU)
 check: test smoke
@@ -14,4 +14,9 @@ smoke:
 
 # machine-readable perf record for the PR trajectory (BENCH_*.json)
 bench:
-	$(PYTHON) -m benchmarks.run --fast --out BENCH_PR2.json
+	$(PYTHON) -m benchmarks.run --fast --out BENCH_PR3.json
+
+# fail if any algorithm regressed its dispatch/sync/index-build shape vs the
+# previous BENCH_*.json record (wall times are informational only)
+bench-compare:
+	$(PYTHON) -m benchmarks.compare

@@ -60,7 +60,6 @@ def run_jax_join(R, S, k, algorithm, r_block=None, s_block=None):
         "index_builds": index.stats.index_builds,
         "tiles_scored": stats.tiles_scored,
         "list_entries": stats.list_entries,
-        "rescued_columns": stats.rescued_columns,
         "dense_pairs": stats.dense_pairs,
     }
 
@@ -108,7 +107,6 @@ def work_counters(R, S, k, r_block, s_block) -> Dict[str, Dict]:
         out[algorithm] = {
             "tiles_scored": stats.tiles_scored,
             "list_entries": stats.list_entries,
-            "rescued_columns": stats.rescued_columns,
             "dense_pairs": stats.dense_pairs,
         }
     return out

@@ -1,0 +1,98 @@
+"""Dispatch-shape regression gate: diff two BENCH_*.json perf records.
+
+  PYTHONPATH=src python -m benchmarks.compare                 # two newest records
+  PYTHONPATH=src python -m benchmarks.compare OLD.json NEW.json
+
+For every algorithm stream present in BOTH records, the NEW record must not
+regress the dispatch shape the engine exists to provide:
+
+  * total device dispatches over the query stream must not grow,
+  * host syncs of any single query must not grow,
+  * lifetime ``index_builds`` must not grow (build-once stays build-once).
+
+Wall times are printed for context but never gate (CI machines vary); the
+dispatch/sync/build counters are machine-independent.  Exit code 1 on any
+regression — ``make bench-compare`` wires this into CI.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import re
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _latest_pair() -> tuple:
+    """The two most recent BENCH_PR<n>.json records by PR number."""
+
+    def pr_num(p):
+        m = re.search(r"BENCH_PR(\d+)\.json$", p)
+        return int(m.group(1)) if m else -1
+
+    records = sorted(glob.glob("BENCH_*.json"), key=pr_num)
+    if len(records) < 2:
+        raise SystemExit(
+            f"need two BENCH_*.json records to compare, found {records}"
+        )
+    return records[-2], records[-1]
+
+
+def compare(old_path: str, new_path: str) -> int:
+    old, new = _load(old_path), _load(new_path)
+    failures = []
+    rows = []
+    for name, ns in new.get("streams", {}).items():
+        os_ = old.get("streams", {}).get(name)
+        if os_ is None:
+            continue
+        checks = {
+            "device_dispatches": (
+                sum(ns["device_dispatches"]), sum(os_["device_dispatches"])
+            ),
+            "host_syncs/query": (max(ns["host_syncs"]), max(os_["host_syncs"])),
+            "index_builds": (ns["index_builds"], os_["index_builds"]),
+        }
+        for metric, (new_v, old_v) in checks.items():
+            verdict = "ok" if new_v <= old_v else "REGRESSED"
+            if new_v < old_v:
+                verdict = "improved"
+            rows.append(f"  {name:12s} {metric:20s} {old_v:>6} -> {new_v:<6} {verdict}")
+            if new_v > old_v:
+                failures.append(f"{name}.{metric}: {old_v} -> {new_v}")
+        rows.append(
+            f"  {name:12s} {'query_s (info)':20s} "
+            f"{os_['query_s']} -> {ns['query_s']}"
+        )
+    print(f"dispatch-shape diff: {old_path} -> {new_path}")
+    print("\n".join(rows))
+    if failures:
+        print(f"\nFAIL: {len(failures)} dispatch-shape regression(s):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nOK: no algorithm regressed its dispatch shape")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("records", nargs="*", metavar="BENCH.json",
+                    help="OLD NEW (default: the two newest BENCH_PR*.json)")
+    args = ap.parse_args(argv)
+    if len(args.records) == 2:
+        old_path, new_path = args.records
+    elif not args.records:
+        old_path, new_path = _latest_pair()
+    else:
+        ap.error("pass exactly two records, or none for auto-detection")
+    return compare(old_path, new_path)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,30 +31,33 @@ def smoke() -> int:
     must be visible in the counters.
 
     Fails (non-zero exit) on either regression the engine exists to prevent:
-      * index reuse — S-block indexes rebuilt per query instead of once;
+      * index reuse — S-block indexes rebuilt per query instead of once
+        (IIB and, since the superset refactor, IIIB too);
       * dispatch shape — a query stream exceeding queries x r_blocks scan
         dispatches (i.e. the driver fell back to per-(R,S)-pair dispatch),
-        or host syncs on the BF/IIB scan path beyond the one per-R-block
-        result pull (i.e. a per-pair host round-trip crept back in).
+        or host syncs beyond the one per-R-block result pull (i.e. a
+        per-pair host round-trip crept back in).
     """
     from benchmarks.common import gen, run_repeated_query
 
     R = gen("synthetic", 96, seed=0, dim=2048, nnz=24)
     S = gen("synthetic", 160, seed=1, dim=2048, nnz=24)
     queries = 3
-    out = run_repeated_query(R, S, k=5, algorithm="iib", queries=queries,
-                             r_block=48, s_block=64)
-    reuse_ok = out["index_builds"] == out["s_blocks"]
-    r_blocks = out["r_blocks"]
-    dispatch_ok = sum(out["device_dispatches"]) <= queries * r_blocks
-    sync_ok = all(h <= r_blocks for h in out["host_syncs"])
-    print(json.dumps({
-        "smoke": out,
-        "index_reuse_ok": reuse_ok,
-        "scan_dispatch_ok": dispatch_ok,
-        "host_sync_ok": sync_ok,
-    }))
-    return 0 if (reuse_ok and dispatch_ok and sync_ok) else 1
+    checks = {}
+    ok = True
+    for algorithm in ("iib", "iiib"):
+        out = run_repeated_query(R, S, k=5, algorithm=algorithm, queries=queries,
+                                 r_block=48, s_block=64)
+        r_blocks = out["r_blocks"]
+        c = {
+            "index_reuse_ok": out["index_builds"] == out["s_blocks"],
+            "scan_dispatch_ok": sum(out["device_dispatches"]) <= queries * r_blocks,
+            "host_sync_ok": all(h <= r_blocks for h in out["host_syncs"]),
+        }
+        ok &= all(c.values())
+        checks[algorithm] = {"smoke": out, **c}
+    print(json.dumps(checks))
+    return 0 if ok else 1
 
 
 def perf_record(fast: bool, out_path: str) -> int:

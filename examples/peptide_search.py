@@ -46,8 +46,8 @@ def main():
           f"in {dt:.2f}s ({args.nr / dt:.0f} spectra/s; "
           f"library prepared once in {index.stats.build_wall_s:.2f}s)")
     print(f"work: {stats.list_entries} indexed-feature touches, "
-          f"{stats.rescued_columns} rescued columns, "
-          f"{stats.index_builds} threshold-index rebuilds")
+          f"{stats.device_dispatches} device dispatches, "
+          f"{stats.index_builds} query-time index builds")
     print("\nspectrum -> best peptide matches (id: score):")
     for i in range(min(5, args.nr)):
         matches = ", ".join(

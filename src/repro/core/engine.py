@@ -30,11 +30,15 @@ costs O(R-blocks) device dispatches — not O(R-blocks x S-blocks):
     streams them through the tile-skipping matmul, maintaining the per-row
     top-k in VMEM across the S grid axis — block score matrices never
     round-trip HBM.
-  * IIIB still rebuilds its threshold-dependent refinement per (B_r, B_s)
-    pair — the threshold is the live MinPruneScore — but the threshold now
-    stays ON DEVICE (the builder reads it from the carried TopKState); the
-    host only syncs it once per R block, to size the static ``max_rows``
-    bound, instead of once per pair.
+  * IIIB is as device-resident as BF/IIB: ``build`` constructs a
+    threshold-INDEPENDENT superset index once per S block (every feature
+    indexed, in the datastore's dim-frequency-rank order) plus per-(row,
+    tile) mass partial sums, stacked like the IIB indexes.  The live
+    MinPruneScore refinement is an on-device mask inside one jitted
+    ``lax.scan`` whose carry holds the TopKState AND the threshold
+    (core/iiib.py) — lists shrink by masking, never by rebuilding, and the
+    only host sync left is the per-R-block result pull (the threshold
+    trace and pruned-work counters ride home with it).
 
 ``JoinStats.device_dispatches`` / ``host_syncs`` make the dispatch shape
 observable (``benchmarks/run.py --smoke`` asserts it).
@@ -50,7 +54,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -60,6 +63,7 @@ import numpy as np
 from repro.core import iiib as iiib_mod
 from repro.core.bf import bf_block_scores, bf_join_block, bf_scan_join
 from repro.core.iib import iib_join_block, iib_scan_join
+from repro.core.iiib import iiib_masked_block, iiib_scan_join
 from repro.core.index import (
     DEFAULT_TILE,
     active_tile_list,
@@ -85,14 +89,16 @@ class JoinStats:
 
     blocks: int = 0
     tiles_scored: int = 0          # (tile-matmul count) — IIB/IIIB indexed work
-    list_entries: int = 0          # Σ list lengths actually scored
-    rescued_columns: int = 0       # IIIB phase-2 width
+    list_entries: int = 0          # Σ list entries actually scored (IIIB: unmasked only)
     dense_pairs: int = 0           # BF full-score pairs
     index_builds: int = 0          # S-block index constructions (build-once observable)
     device_dispatches: int = 0     # driver-level device launches (scan/kernel/join steps)
     host_syncs: int = 0            # device→host materializations on the query path
     build_wall_s: float = 0.0      # time spent inside build()/extend()
     query_wall_s: float = 0.0      # time spent inside query()
+    # IIIB observability: per-R-block MinPruneScore traces ((s_blocks + 1,)
+    # each: [seed, after block 0, ...]) — pulled with the result, no extra sync
+    min_prune_trace: List[np.ndarray] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +132,7 @@ class JoinPlan:
     k: int
     cost_bf: float      # C2 estimate: every dim-tile of every pair is scored
     cost_iib: float     # C3 estimate: work proportional to inverted-list mass
+    cost_iiib: float    # C3 + threshold masking; NO per-pair rebuild charge
 
 
 def _shape_stats(shape) -> Tuple[int, float, int]:
@@ -150,8 +157,11 @@ def plan(r_shape, s_shape, spec: JoinSpec, occupied_tiles: Optional[int] = None)
     ``n_r * n_s * D_padded``.  C3 (IIB/IIIB): per active tile the matmul is
     against the tile's row list, cost ``n_r * tile * Σ list lengths`` =
     ``n_r * n_s * tile * E[tiles per S row]``, times the per-entry overhead
-    of indexed scoring.  IIIB's threshold refinement only ever shrinks the
-    lists, so when the indexed side wins we pick IIIB.
+    of indexed scoring.  IIIB scores through the same superset lists, built
+    ONCE at ``build()`` — since the threshold refinement became an on-device
+    mask there is no per-(B_r, B_s) rebuild charge in its query cost
+    anymore, and masking can only shrink the scored mass, so
+    ``cost_iiib <= cost_iib`` and the indexed side always resolves to IIIB.
     """
     n_r, f_r, d_r = _shape_stats(r_shape)
     n_s, f_s, d_s = _shape_stats(s_shape)
@@ -162,13 +172,14 @@ def plan(r_shape, s_shape, spec: JoinSpec, occupied_tiles: Optional[int] = None)
     tiles_per_s_row = t_eff * (1.0 - (1.0 - 1.0 / t_eff) ** max(f_s, 0.0))
     cost_bf = float(n_r) * n_s * t * spec.tile
     cost_iib = INDEX_COST_FACTOR * float(n_r) * n_s * tiles_per_s_row * spec.tile
+    cost_iiib = cost_iib
 
     if spec.algorithm is not None:
         algorithm = spec.algorithm
     elif spec.use_kernel:
         algorithm = "iib"
     else:
-        algorithm = "bf" if cost_bf <= cost_iib else "iiib"
+        algorithm = "bf" if cost_bf <= cost_iiib else "iiib"
 
     s_block = spec.s_block if spec.s_block else min(n_s, DEFAULT_S_BLOCK)
     s_block = max(1, min(s_block, max(n_s, 1)))
@@ -177,6 +188,7 @@ def plan(r_shape, s_shape, spec: JoinSpec, occupied_tiles: Optional[int] = None)
     return JoinPlan(
         algorithm=algorithm, r_block=r_block, s_block=s_block,
         tile=spec.tile, k=spec.k, cost_bf=cost_bf, cost_iib=cost_iib,
+        cost_iiib=cost_iiib,
     )
 
 
@@ -272,10 +284,9 @@ def _bf_step(state, r_block, s_block, s_offset, s_valid):
     return bf_join_block(state, r_block, s_block, s_offset, s_valid)
 
 
+# one jitted builder serves IIB (identity dims) and IIIB (rank-permuted
+# superset) — both are threshold-free; IIIB's refinement is a query-time mask
 _build_index_iib = jax.jit(build_tile_index, static_argnames=("max_rows", "tile"))
-_build_index_iiib = jax.jit(
-    partial(build_tile_index, uniform=False), static_argnames=("max_rows", "tile")
-)
 
 
 def _device_batch(host: SparseBatch) -> SparseBatch:
@@ -333,14 +344,14 @@ class _KernelStack:
 
 @dataclasses.dataclass
 class _SBlock:
-    """One cached S block: host mirror plus optional per-block device batch."""
+    """One cached S block: host mirror plus host-side index metadata."""
 
-    host: SparseBatch             # numpy mirror (host-side threshold bounds)
+    host: SparseBatch             # numpy mirror (streaming re-uploads from here)
     valid: np.ndarray             # (s_block,) bool
     start: int                    # global row offset
-    batch: Optional[SparseBatch] = None   # device copy (IIIB cached mode only)
-    list_total: int = 0           # Σ list lengths of the block's IIB index
-    bound: int = 0                # host max_rows bound (IIB stacking)
+    list_total: int = 0           # Σ list lengths of the block's tile index
+    bound: int = 0                # host max_rows bound (IIB/IIIB stacking)
+    tilemass: Optional[np.ndarray] = None  # (s_block, T) rank-permuted mass (IIIB)
 
 
 class SparseKNNIndex:
@@ -348,12 +359,14 @@ class SparseKNNIndex:
 
     ``build`` pays S-side preprocessing once: block padding, host mirrors,
     dim statistics, and the batched device stacks the scanned query driver
-    consumes (for BF the padded-CSR blocks; for IIB the per-block
-    tile-inverted indexes; for the kernel path the dense dim-tiles — IIIB
-    instead caches per-block device batches for its host-orchestrated
-    refinement).  Every ``query`` then streams an R batch against the
-    cached structures in O(R-blocks) device dispatches, and a query stream
-    costs O(S-blocks) index builds total instead of O(queries x S-blocks).
+    consumes — for BF the padded-CSR blocks; for IIB the per-block
+    tile-inverted indexes; for the kernel path the dense dim-tiles; for
+    IIIB the threshold-independent superset indexes (rank-permuted, every
+    feature indexed) plus the per-(row, tile) mass partial sums its
+    query-time threshold mask compares against.  Every ``query`` then
+    streams an R batch against the cached structures in O(R-blocks) device
+    dispatches, and a query stream costs O(S-blocks) index builds total
+    instead of O(queries x S-blocks).
 
     ``cache_device_blocks=False`` keeps only the host mirrors resident and
     materializes each S block (and, for IIB, its tile index) on the fly per
@@ -389,10 +402,21 @@ class SparseKNNIndex:
         self.algorithm = spec.algorithm or p.algorithm
         self.s_block = max(1, min(spec.s_block or p.s_block, self.n_s))
 
+        # IIIB superset ordering: the datastore's dim-frequency rank, FROZEN
+        # at build time — extend() keeps it so retained stack blocks stay
+        # valid (the ordering is a pruning heuristic, not a correctness input)
+        if self.algorithm == "iiib":
+            self._rank_np = iiib_mod.s_frequency_rank(self.dim_freq)
+            self._rank_dev = jnp.asarray(self._rank_np)
+        else:
+            self._rank_np = None
+            self._rank_dev = None
+
         self._blocks: List[_SBlock] = []
         self._bf_stack: Optional[_BFStack] = None
         self._iib_stack: Optional[_IIBStack] = None
         self._kernel_stack: Optional[_KernelStack] = None
+        self._mass_stack: Optional[jax.Array] = None   # (B, s_block, T) — IIIB
         self._build_blocks(from_block=0)
         self.stats.build_wall_s += time.perf_counter() - t0
 
@@ -459,14 +483,17 @@ class SparseKNNIndex:
         )
         host = SparseBatch(indices=idx, values=val, nnz=nnz, dim=self.dim)
         blk = _SBlock(host=host, valid=valid, start=start)
-        if self._cache_device:
-            if self.algorithm == "iiib":
-                # per-pair refinement loop reads the cached device batch
-                blk.batch = _device_batch(host)
-            elif self.algorithm == "iib" and not self.spec.use_kernel:
-                # the stacked-index max_rows bound (host, cheap) — the index
-                # itself is built into the stack, not per block
-                blk.bound = max_rows_bound(host, self.tile)
+        if self.algorithm == "iib" and not self.spec.use_kernel:
+            # the max_rows shape bound (host, cheap); streaming reuses it
+            # per pair, cached mode to size the common stack
+            blk.bound = max_rows_bound(host, self.tile)
+        elif self.algorithm == "iiib":
+            # superset bound + the per-(row, tile) mass partial sums the
+            # threshold mask compares against (both threshold-independent)
+            blk.bound = max_rows_bound(host, self.tile, rank=self._rank_np)
+            blk.tilemass = iiib_mod.tile_mass_host(
+                idx, val, self.dim, self._rank_np, self.tile
+            )
         return blk
 
     # -- batched device stacks ----------------------------------------------
@@ -475,14 +502,15 @@ class SparseKNNIndex:
         if not self._cache_device:
             return
         if self.algorithm == "bf":
-            self._bf_stack = self._stack_bf()
+            self._bf_stack = self._stack_bf(from_block)
         elif self.algorithm == "iib":
             if self.spec.use_kernel:
-                self._kernel_stack = self._stack_kernel()
+                self._kernel_stack = self._stack_kernel(from_block)
             else:
                 self._iib_stack = self._stack_iib(from_block)
-        # iiib: threshold-dependent — nothing cacheable beyond the per-block
-        # device batches (_make_block)
+        else:  # iiib: superset tile indexes + tilemass, stacked like IIB
+            self._iib_stack = self._stack_iib(from_block, rank=self._rank_dev)
+            self._mass_stack = self._stack_mass(from_block)
 
     def _stack_starts_valid(self) -> Tuple[jax.Array, jax.Array]:
         b, sb = len(self._blocks), self.s_block
@@ -490,25 +518,53 @@ class SparseKNNIndex:
         valid = (np.arange(b * sb) < self.n_s).reshape(b, sb)
         return jnp.asarray(starts), jnp.asarray(valid)
 
-    def _stack_bf(self) -> _BFStack:
-        """Stack the padded-CSR blocks: (B, s_block, F) device arrays."""
+    def _stack_bf(self, from_block: int) -> _BFStack:
+        """Stack the padded-CSR blocks: (B, s_block, F) device arrays.
+
+        Incremental: on ``extend`` the retained prefix of the old stack is
+        kept on device (feature axis padded if the new rows are wider) and
+        only the tail blocks are re-uploaded from the host mirror.
+        """
         b, sb, f = len(self._blocks), self.s_block, self._idx.shape[1]
-        idx = np.full((b * sb, f), self.dim, self._idx.dtype)
-        val = np.zeros((b * sb, f), self._val.dtype)
-        nnz = np.zeros((b * sb,), self._nnz.dtype)
-        idx[: self.n_s] = self._idx
-        val[: self.n_s] = self._val
-        nnz[: self.n_s] = self._nnz
+        old = self._bf_stack if from_block > 0 else None
+        parts_i, parts_v, parts_n = [], [], []
+        if old is not None:
+            oi, ov = old.idx[:from_block], old.val[:from_block]
+            pad = f - oi.shape[2]
+            if pad > 0:
+                oi = jnp.concatenate(
+                    [oi, jnp.full(oi.shape[:2] + (pad,), self.dim, oi.dtype)], axis=2
+                )
+                ov = jnp.concatenate(
+                    [ov, jnp.zeros(ov.shape[:2] + (pad,), ov.dtype)], axis=2
+                )
+            parts_i.append(oi)
+            parts_v.append(ov)
+            parts_n.append(old.nnz[:from_block])
+        lo, hi = from_block * sb, b * sb
+        idx = np.full((hi - lo, f), self.dim, self._idx.dtype)
+        val = np.zeros((hi - lo, f), self._val.dtype)
+        nnz = np.zeros((hi - lo,), self._nnz.dtype)
+        idx[: self.n_s - lo] = self._idx[lo:]
+        val[: self.n_s - lo] = self._val[lo:]
+        nnz[: self.n_s - lo] = self._nnz[lo:]
+        parts_i.append(jnp.asarray(idx.reshape(-1, sb, f)))
+        parts_v.append(jnp.asarray(val.reshape(-1, sb, f)))
+        parts_n.append(jnp.asarray(nnz.reshape(-1, sb)))
         starts, valid = self._stack_starts_valid()
         return _BFStack(
-            idx=jnp.asarray(idx.reshape(b, sb, f)),
-            val=jnp.asarray(val.reshape(b, sb, f)),
-            nnz=jnp.asarray(nnz.reshape(b, sb)),
+            idx=jnp.concatenate(parts_i, axis=0),
+            val=jnp.concatenate(parts_v, axis=0),
+            nnz=jnp.concatenate(parts_n, axis=0),
             starts=starts, valid=valid,
         )
 
-    def _stack_iib(self, from_block: int) -> _IIBStack:
+    def _stack_iib(self, from_block: int, rank: Optional[jax.Array] = None) -> _IIBStack:
         """Stack per-block tile indexes with one common ``max_rows``.
+
+        ``rank=None`` builds IIB's identity-dim indexes; IIIB passes the
+        frozen S-frequency rank to get its threshold-independent superset
+        indexes (same structure, permuted dim space).
 
         Incremental: on ``extend`` the retained prefix of the old stack is
         only PADDED to the new bound (sentinel rows, zero values — a pad is
@@ -536,8 +592,7 @@ class SparseKNNIndex:
             parts_v.append(pv)
             parts_c.append(pc)
         for blk in tail:
-            batch = blk.batch if blk.batch is not None else _device_batch(blk.host)
-            ti = _build_index_iib(batch, max_rows=m, tile=tile)
+            ti = _build_index_iib(_device_batch(blk.host), max_rows=m, tile=tile, rank=rank)
             self.stats.index_builds += 1
             blk.list_total = int(np.asarray(ti.counts).sum())
             parts_r.append(ti.rows[None])
@@ -551,30 +606,52 @@ class SparseKNNIndex:
             starts=starts, valid=valid, max_rows=m,
         )
 
-    def _stack_kernel(self) -> _KernelStack:
-        """Stack dense dim-tiles of all S blocks for the fused kernel."""
+    def _stack_mass(self, from_block: int) -> jax.Array:
+        """(B, s_block, T) stacked tilemass; prefix retained across extend."""
+        parts = []
+        if from_block > 0 and self._mass_stack is not None:
+            parts.append(self._mass_stack[:from_block])
+        for blk in self._blocks[from_block:]:
+            parts.append(jnp.asarray(blk.tilemass)[None])
+        return jnp.concatenate(parts, axis=0)
+
+    def _stack_kernel(self, from_block: int) -> _KernelStack:
+        """Stack dense dim-tiles of all S blocks for the fused kernel.
+
+        Incremental: dense tiles are per-column independent, so ``extend``
+        keeps the retained blocks' columns of the old device stack and only
+        densifies the tail rows (plus fresh alignment padding).
+        """
         ns = len(self._blocks) * self.s_block
         bs_k = 256 if ns >= 256 else -(-ns // 8) * 8
         ns_pad = -(-ns // bs_k) * bs_k
+        keep = from_block * self.s_block
+        old = self._kernel_stack if from_block > 0 else None
         f = self._idx.shape[1]
-        idx = np.full((ns_pad, f), self.dim, np.int32)
-        val = np.zeros((ns_pad, f), np.float32)
-        nnz = np.zeros(ns_pad, np.int32)
-        idx[: self.n_s] = self._idx
-        val[: self.n_s] = self._val
-        nnz[: self.n_s] = self._nnz
+        idx = np.full((ns_pad - keep, f), self.dim, np.int32)
+        val = np.zeros((ns_pad - keep, f), np.float32)
+        nnz = np.zeros(ns_pad - keep, np.int32)
+        idx[: self.n_s - keep] = self._idx[keep:]
+        val[: self.n_s - keep] = self._val[keep:]
+        nnz[: self.n_s - keep] = self._nnz[keep:]
         from repro.kernels.knn_score.ops import dense_tiles_with_sentinel
 
-        big = SparseBatch(
+        tail = SparseBatch(
             indices=jnp.asarray(idx), values=jnp.asarray(val),
             nnz=jnp.asarray(nnz), dim=self.dim,
         )
-        s_tiles = dense_tiles_with_sentinel(big, self.tile)  # (T+1, NS_pad, tile)
+        tail_tiles = dense_tiles_with_sentinel(tail, self.tile)  # (T+1, tail, tile)
+        tail_occ = _host_row_occupancy(idx, self.dim, self.tile)
+        if old is not None:
+            s_tiles = jnp.concatenate([old.s_tiles[:, :keep, :], tail_tiles], axis=1)
+            s_occ = np.concatenate([old.s_occ[:keep], tail_occ])
+        else:
+            s_tiles, s_occ = tail_tiles, tail_occ
         col_valid = (np.arange(ns_pad) < self.n_s).astype(np.int32)
         col_ids = np.where(col_valid > 0, np.arange(ns_pad, dtype=np.int32), -1)
         return _KernelStack(
             s_tiles=s_tiles,
-            s_occ=_host_row_occupancy(idx, self.dim, self.tile),
+            s_occ=s_occ,
             col_valid=jnp.asarray(col_valid[None, :]),
             col_ids=jnp.asarray(col_ids[None, :]),
             block_s=bs_k,
@@ -628,10 +705,11 @@ class SparseKNNIndex:
 
         The R-block loop is the paper's Algorithm 1 outer loop.  With cached
         device stacks the whole S side of one R block is ONE device dispatch
-        (a ``lax.scan`` for BF/IIB, the fused knn_topk kernel for the kernel
-        path); streaming mode falls back to the legacy per-pair loop.  IIIB
-        is per-pair either way (the refinement threshold is live state), but
-        cached mode syncs the threshold to host only once per R block.
+        — a ``lax.scan`` for BF/IIB, a threshold-in-carry ``lax.scan`` for
+        IIIB, the fused knn_topk kernel for the kernel path — and the only
+        host sync is the per-R-block result pull.  Streaming mode falls back
+        to the legacy per-pair loop (transient device blocks, per-pair
+        threshold syncs for IIIB).
         """
         t_q = time.perf_counter()
         stats = stats if stats is not None else JoinStats()
@@ -668,23 +746,26 @@ class SparseKNNIndex:
         for r0 in range(0, n_r, rb):
             br, r_valid = _pad_block(R, r0, rb)
             state = init_topk(rb, k)                       # InitPruneScore
+            aux = None
             if sampled_ids is not None:
-                # warm-start pass: exact BF scores of the sample seed the top-k
+                # warm-start pass: exact BF scores of the sample seed the
+                # top-k — and with it the MinPruneScore, entirely on device
                 sc = bf_block_scores(br, sample_block)
                 state = topk_update(state, sc, jnp.asarray(sampled_ids, jnp.int32))
                 stats.dense_pairs += rb * len(sampled_ids)
                 stats.device_dispatches += 1
 
+            n_valid = min(rb, n_r - r0)          # real rows of this R block
             if algorithm == "bf":
                 if cached:
                     state = self._query_bf_scanned(state, br, stats, rb)
                 else:
-                    state = self._query_pairs(state, br, None, None, stats, rb, None)
+                    state = self._query_pairs(state, br, None, None, stats, rb)
             elif algorithm == "iib":
                 if spec.use_kernel and cached:
                     # the fused kernel derives its own (r-block, s-block)
                     # active lists from row occupancy
-                    state = self._query_fused_kernel(state, br, stats, rb)
+                    state = self._query_fused_kernel(state, br, stats, rb, n_valid)
                 else:
                     # R-side active tiles (host, concrete) — true tile skipping
                     occ_any = _host_tile_any(br, tile, t_total)
@@ -694,18 +775,28 @@ class SparseKNNIndex:
                         state = self._query_iib_scanned(state, r_tiles, tiles, stats)
                     else:
                         r_tiles = None if spec.use_kernel else dense_r_tiles(br, None, tile)
-                        state = self._query_pairs(state, br, r_tiles, tiles, stats, rb, None)
-            else:  # iiib — threshold-dependent refinement rebuilt per pair
-                rank, maxw, r_tiles = iiib_mod.prepare_r_block(br, tile)
-                rank_np = np.asarray(rank)
-                maxw_np = np.asarray(maxw)
-                occ_any = _host_tile_any(br, tile, t_total, rank_np)
+                        state = self._query_pairs(state, br, r_tiles, tiles, stats, rb)
+            else:  # iiib — masked superset refinement, threshold in carry
+                r_tiles = dense_r_tiles(br, self._rank_dev, tile)
+                mwt = iiib_mod.maxw_tiles(br, self._rank_dev, tile)
+                occ_any = _host_tile_any(br, tile, t_total, self._rank_np)
                 tiles = jnp.asarray(active_tile_list(occ_any))
-                iiib_ctx = (rank, maxw, rank_np, maxw_np, sampled_mask)
-                state = self._query_pairs(state, br, r_tiles, tiles, stats, rb, iiib_ctx)
+                rv = jnp.asarray(r_valid)
+                if cached:
+                    state, aux = self._query_iiib_scanned(
+                        state, r_tiles, mwt, tiles, stats, sampled_mask, rv
+                    )
+                else:
+                    state = self._query_pairs_iiib(
+                        state, r_tiles, mwt, tiles, stats, sampled_mask, rv
+                    )
 
             out_scores.append(np.asarray(state.scores)[r_valid])
             out_ids.append(np.asarray(state.ids)[r_valid])
+            if aux is not None:
+                # rides home with the result pull — same sync point
+                stats.list_entries += int(np.asarray(aux["kept"]).sum())
+                stats.min_prune_trace.append(np.asarray(aux["thr"]))
             stats.host_syncs += 1                          # the R block's result pull
 
         dt = time.perf_counter() - t_q
@@ -743,21 +834,60 @@ class SparseKNNIndex:
         stats.list_entries += sum(blk.list_total for blk in self._blocks)
         return state
 
-    def _query_fused_kernel(self, state, br, stats, rb):
+    def _sampled_valid(self, sampled_mask: Optional[np.ndarray]) -> np.ndarray:
+        """(B, s_block) bool — padding AND warm-start-sampled rows masked out
+        (sampled rows were already offered by the warm-start pass).  The one
+        home of this mask: the scan stacks it, the streaming loop slices it."""
+        b, sb = len(self._blocks), self.s_block
+        valid = np.arange(b * sb) < self.n_s
+        if sampled_mask is not None:
+            valid[: self.n_s] &= ~sampled_mask
+        return valid.reshape(b, sb)
+
+    def _query_iiib_scanned(self, state, r_tiles, mwt, tiles, stats, sampled_mask, rv):
+        """IIIB's whole S side as ONE dispatch: the superset-index scan with
+        (TopKState, MinPruneScore) in the carry.  The warm-started threshold
+        seeds the carry as a device scalar — no host sync before the scan —
+        and the per-block threshold trace + kept-entry counts come back as
+        scan outputs, pulled together with the R block's result."""
+        st = self._iib_stack
+        b = len(self._blocks)
+        thr0 = min_prune_score(state, valid=rv)   # device scalar — warm start included
+        state, _, thr_trace, kept = iiib_scan_join(
+            state, thr0, r_tiles, mwt, tiles,
+            st.rows, st.vals, st.counts, self._mass_stack, st.starts,
+            jnp.asarray(self._sampled_valid(sampled_mask)), rv,
+            tile=self.tile, num_s=self.s_block,
+        )
+        stats.device_dispatches += 1
+        stats.blocks += b
+        stats.tiles_scored += int(tiles.shape[0]) * b
+        # trace = [seed, after block 0, ..., after block B-1]  (B+1 values)
+        return state, {"thr": jnp.concatenate([thr0[None], thr_trace]), "kept": kept}
+
+    def _query_fused_kernel(self, state, br, stats, rb, n_valid):
         """One fused score→top-k kernel call covers every S block: scores
-        stream tile-by-tile through VMEM, never materializing in HBM."""
+        stream tile-by-tile through VMEM, never materializing in HBM.  The
+        carried state's MinPruneScore seeds the kernel threshold, which
+        then rises in VMEM-resident state across the S grid axis — earlier
+        S blocks prune later ones without ever leaving the device.
+        ``n_valid`` (real rows of a possibly-ragged final R block) keeps
+        padding rows out of the kernel's threshold reduce."""
         from repro.kernels.knn_score.ops import _pad_rows, active_lists, dense_tiles_with_sentinel
         from repro.kernels.knn_topk.kernel import knn_topk_pallas
         from repro.kernels.knn_topk.ops import pad_state
 
         ks = self._kernel_stack
         br_k = 256 if rb >= 256 else -(-rb // 8) * 8
+        rv = jnp.arange(rb) < n_valid
+        thr = min_prune_score(state, valid=rv).reshape(1, 1)
         r_tiles = _pad_rows(dense_tiles_with_sentinel(br, self.tile), br_k)
         r_occ = _host_row_occupancy(np.asarray(br.indices), self.dim, self.tile)
         active = jnp.asarray(active_lists(r_occ, ks.s_occ, br_k, ks.block_s))
         init_s, init_i = pad_state(state, r_tiles.shape[1])
-        out_s, out_i = knn_topk_pallas(
+        out_s, out_i, _ = knn_topk_pallas(
             r_tiles, ks.s_tiles, active, ks.col_valid, ks.col_ids, init_s, init_i,
+            thr=thr, nr_valid=jnp.full((1,), n_valid, jnp.int32),
             block_r=br_k, block_s=ks.block_s, interpret=_interpret_kernels(),
         )
         stats.device_dispatches += 1
@@ -766,50 +896,20 @@ class SparseKNNIndex:
         stats.tiles_scored += int((np.asarray(active) < t_total).sum())
         return TopKState(scores=out_s[:rb], ids=out_i[:rb])
 
-    # -- per-pair loop (streaming mode; IIIB in every mode) ------------------
+    # -- per-pair loops (streaming mode) -------------------------------------
 
-    def _query_pairs(self, state, br, r_tiles, tiles, stats, rb, iiib_ctx):
-        """The legacy Algorithm-1 inner loop: one step per (B_r, B_s) pair.
-
-        Streaming mode drives BF/IIB through here with transient device
-        blocks (O(block) device memory).  IIIB always lands here — its index
-        is threshold-dependent — but with cached blocks the MinPruneScore
-        host sync happens ONCE per R block (sizing the static max_rows
-        bound); the index builder itself reads the live threshold from the
-        carried state, on device.
-        """
+    def _query_pairs(self, state, br, r_tiles, tiles, stats, rb):
+        """The legacy Algorithm-1 inner loop for BF/IIB: one step per
+        (B_r, B_s) pair with transient device blocks (O(block) memory)."""
         spec = self.spec
         algorithm = self.algorithm
         sb = self.s_block
-        n_s = self.n_s
         tile = self.tile
-        cached = self._cache_device
-
-        if iiib_ctx is not None:
-            rank, maxw, rank_np, maxw_np, sampled_mask = iiib_ctx
-            if cached:
-                # the one host sync of the R block: a concrete threshold to
-                # size max_rows (a static shape).  Stale for later pairs —
-                # the TRUE threshold only rises, so lists only shrink and
-                # the bound stays valid; the builder uses the live value.
-                mps_host = float(np.asarray(min_prune_score(state)))
-                stats.host_syncs += 1
-        else:
-            sampled_mask = None
 
         for blk in self._blocks:
             s0 = blk.start
-            # streaming mode: the device copy is transient, per pair
-            bs = blk.batch if blk.batch is not None else _device_batch(blk.host)
-            if sampled_mask is not None:
-                # sampled rows were already offered in the warm-start pass
-                in_block = np.zeros(sb, bool)
-                hi = min(s0 + sb, n_s)
-                in_block[: hi - s0] = sampled_mask[s0:hi]
-                s_valid_np = blk.valid & ~in_block
-            else:
-                s_valid_np = blk.valid
-            s_valid = jnp.asarray(s_valid_np)
+            bs = _device_batch(blk.host)      # transient, per pair
+            s_valid = jnp.asarray(blk.valid)
             s_off = jnp.int32(s0)
             stats.blocks += 1
 
@@ -818,71 +918,61 @@ class SparseKNNIndex:
                 stats.dense_pairs += rb * sb
                 stats.device_dispatches += 1
 
-            elif algorithm == "iib":
-                if spec.use_kernel:
-                    # fused score→top-k kernel, one pair at a time (the
-                    # streaming counterpart of _query_fused_kernel)
-                    from repro.kernels.knn_topk.ops import knn_topk as _fused
+            elif spec.use_kernel:
+                # fused score→top-k kernel, one pair at a time (the
+                # streaming counterpart of _query_fused_kernel)
+                from repro.kernels.knn_topk.ops import knn_topk as _fused
 
-                    state = _fused(
-                        br, bs, state=state, s_offset=s0, s_valid=s_valid_np,
-                        tile=tile, block_r=min(256, rb), block_s=min(256, sb),
-                        interpret=_interpret_kernels(),
-                    )
-                    stats.tiles_scored += int(tiles.shape[0])
-                    stats.device_dispatches += 1
-                else:
-                    m = max_rows_bound(blk.host, tile)
-                    index = _build_index_iib(bs, max_rows=m, tile=tile)
-                    stats.index_builds += 1
-                    self.stats.index_builds += 1
-                    entries = int(np.asarray(index.counts).sum())
-                    stats.host_syncs += 1
-                    state = iib_join_block(
-                        state, r_tiles, index, tiles, s_off, s_valid
-                    )
-                    stats.tiles_scored += int(tiles.shape[0])
-                    stats.list_entries += entries
-                    stats.device_dispatches += 2
-
-            else:  # iiib — threshold-dependent refinement rebuilt per pair
-                if cached:
-                    thr = min_prune_score(state)          # live, on device
-                else:
-                    mps_host = float(np.asarray(min_prune_score(state)))
-                    stats.host_syncs += 1
-                    thr = jnp.float32(mps_host)
-                m = max_rows_bound(
-                    blk.host, tile, rank=rank_np, maxw=maxw_np,
-                    min_prune_score=mps_host,
+                state = _fused(
+                    br, bs, state=state, s_offset=s0, s_valid=blk.valid,
+                    tile=tile, block_r=min(256, rb), block_s=min(256, sb),
+                    interpret=_interpret_kernels(),
                 )
-                index = _build_index_iiib(
-                    bs, max_rows=m, tile=tile, rank=rank, maxw=maxw,
-                    min_prune_score=thr,
-                )
+                stats.tiles_scored += int(tiles.shape[0])
+                stats.device_dispatches += 1
+            else:
+                index = _build_index_iib(bs, max_rows=blk.bound, tile=tile)
                 stats.index_builds += 1
                 self.stats.index_builds += 1
-                scores, prune = iiib_mod.indexed_scores_block(state, r_tiles, index, tiles)
-                # rows already fully indexed: their A is exact — merge directly
-                state = iiib_mod.offer_fully_indexed(
-                    state, scores, index.pref_ub, s_off, s_valid
-                )
-                stats.device_dispatches += 3
-                # candidate rescue for rows with an unindexed prefix
-                # (masked columns — padding or warm-start-sampled — excluded)
-                cand = iiib_mod.candidate_columns(
-                    np.where(s_valid_np[None, :], np.asarray(scores), 0.0),
-                    np.asarray(index.pref_ub), np.asarray(prune),
-                )
+                entries = int(np.asarray(index.counts).sum())
                 stats.host_syncs += 1
-                if (cand < sb).any():
-                    state = iiib_mod.rescue(
-                        state, br, bs, jnp.asarray(cand), s_off, num_cand=len(cand)
-                    )
-                    stats.device_dispatches += 1
+                state = iib_join_block(
+                    state, r_tiles, index, tiles, s_off, s_valid
+                )
                 stats.tiles_scored += int(tiles.shape[0])
-                stats.list_entries += int(np.asarray(index.counts).sum())
-                stats.rescued_columns += int((cand < sb).sum())
+                stats.list_entries += entries
+                stats.device_dispatches += 2
+        return state
+
+    def _query_pairs_iiib(self, state, r_tiles, mwt, tiles, stats, sampled_mask, rv):
+        """Streaming IIIB: the same masked-superset step as the scan, driven
+        per pair — the superset index materializes transiently per (B_r,
+        B_s) pair (legacy O(block) device-memory profile) and the threshold
+        round-trips through the host, exactly the behaviour the scanned
+        path is parity-tested against (bit-identical results; the scan just
+        removes the rebuilds and the syncs)."""
+        tile = self.tile
+        s_valid = self._sampled_valid(sampled_mask)
+
+        for bi, blk in enumerate(self._blocks):
+            bs = _device_batch(blk.host)
+            index = _build_index_iib(
+                bs, max_rows=blk.bound, tile=tile, rank=self._rank_dev
+            )
+            stats.index_builds += 1
+            self.stats.index_builds += 1
+            # the legacy per-pair threshold round-trip the scan eliminates
+            thr = jnp.float32(float(np.asarray(min_prune_score(state, valid=rv))))
+            stats.host_syncs += 1
+            state, _, kept = iiib_masked_block(
+                state, thr, r_tiles, index, jnp.asarray(blk.tilemass), mwt,
+                tiles, jnp.int32(blk.start), jnp.asarray(s_valid[bi]), rv,
+            )
+            stats.device_dispatches += 2
+            stats.blocks += 1
+            stats.tiles_scored += int(tiles.shape[0])
+            stats.list_entries += int(np.asarray(kept))
+            stats.host_syncs += 1
         return state
 
 

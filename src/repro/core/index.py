@@ -76,15 +76,20 @@ class TileIndex:
 # builder
 # ---------------------------------------------------------------------------
 
-def _sorted_features(s_block: SparseBatch, rank: Optional[jax.Array]):
-    """Per-row features sorted by (permuted) dimension; returns (p_idx, vals, valid)."""
+def _permuted_features(s_block: SparseBatch, rank: Optional[jax.Array]):
+    """Per-row feature dims mapped through ``rank``; returns (p_idx, valid)."""
     valid = s_block.indices < s_block.dim
     if rank is not None:
         lut = jnp.concatenate([rank.astype(jnp.int32), jnp.array([s_block.dim], jnp.int32)])
         p_idx = lut[jnp.minimum(s_block.indices, s_block.dim)]
     else:
         p_idx = s_block.indices
-    p_idx = jnp.where(valid, p_idx, s_block.dim)
+    return jnp.where(valid, p_idx, s_block.dim), valid
+
+
+def _sorted_features(s_block: SparseBatch, rank: Optional[jax.Array]):
+    """Per-row features sorted by (permuted) dimension; returns (p_idx, vals, valid)."""
+    p_idx, _ = _permuted_features(s_block, rank)
     order = jnp.argsort(p_idx, axis=1, stable=True)
     sp = jnp.take_along_axis(p_idx, order, axis=1)
     sv = jnp.take_along_axis(s_block.values, order, axis=1)
@@ -112,12 +117,15 @@ def build_tile_index(
     d = s_block.dim
     t_total = num_tiles(d, tile)
 
-    sp, sv, sval, order = _sorted_features(s_block, rank)
-
     if min_prune_score is None:
+        # IIB / superset path: no crossing walk, so the per-row feature sort
+        # (only needed to order the cumulative-bound walk) is skipped
+        sp, sval = _permuted_features(s_block, rank)
+        sv = s_block.values
         crossing = jnp.zeros((n,), jnp.int32)
         pref_ub = jnp.zeros((n,), jnp.float32)
     else:
+        sp, sv, sval, order = _sorted_features(s_block, rank)
         maxw_pad = jnp.concatenate([maxw.astype(jnp.float32), jnp.zeros((1,), jnp.float32)])
         m = maxw_pad[jnp.minimum(s_block.indices, d)]
         ms = jnp.take_along_axis(jnp.where(s_block.indices < d, m, 0.0), order, axis=1)
@@ -151,35 +159,33 @@ def build_tile_index(
     occ = occ[:, :t_total] > 0
 
     counts = occ.sum(axis=0).astype(jnp.int32)  # (T,)
-    # pack occupied rows to the front, per tile
-    order_rows = jnp.argsort(~occ, axis=0, stable=True)  # (N, T)
     m_rows = min(max_rows, n)
-    rows = order_rows[:m_rows, :].T.astype(jnp.int32)    # (T, M)
-    slot = jnp.arange(m_rows, dtype=jnp.int32)[None, :]
-    row_valid = slot < counts[:, None]
-    rows = jnp.where(row_valid, rows, n)
 
-    # densify indexed values per (tile, listed row) — sequential over tiles to
-    # bound memory (lax.map, not vmap)
-    def one_tile(args):
-        t, rows_t, rv_t = args
-        safe = jnp.minimum(rows_t, n - 1)
-        gi = sp[safe]                 # (M, F) permuted dims
-        gv = sv[safe]
-        gidx = indexed[safe]
-        rel = gi - t * tile
-        ok = (rel >= 0) & (rel < tile) & gidx & rv_t[:, None]
-        rel = jnp.where(ok, rel, tile)
-        patch = jnp.zeros((m_rows, tile + 1), jnp.float32)
-        patch = patch.at[jnp.arange(m_rows)[:, None], rel].add(jnp.where(ok, gv, 0.0))
-        return patch[:, :tile]
+    # pack occupied rows to the front, per tile: slot[s, t] = number of
+    # occupied rows before s (identical packing to a stable sort on ~occ,
+    # without the O(N log N · T) argsort) — one cumsum + two scatters
+    slot = jnp.cumsum(occ.astype(jnp.int32), axis=0) - 1     # (N, T)
+    ok_row = occ & (slot < m_rows)
+    row_ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, t_total))
+    t_ids = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None, :], (n, t_total))
+    rows = jnp.full((t_total + 1, m_rows), n, jnp.int32)
+    rows = rows.at[
+        jnp.where(ok_row, t_ids, t_total), jnp.clip(slot, 0, m_rows - 1)
+    ].set(jnp.where(ok_row, row_ids, n))
 
-    tids = jnp.arange(t_total, dtype=jnp.int32)
-    vals = jax.lax.map(one_tile, (tids, rows, row_valid))  # (T, M, tile)
+    # densify indexed values with ONE segment-scatter over every (row,
+    # feature) pair: target (tile, list slot, lane) — replaces the former
+    # lax.map over tiles (a gather + scatter per tile)
+    slot_pad = jnp.concatenate([slot, jnp.zeros((n, 1), slot.dtype)], axis=1)
+    slot_f = jnp.take_along_axis(slot_pad, jnp.minimum(f_tid, t_total), axis=1)  # (N, F)
+    ok_f = indexed & (slot_f < m_rows)
+    rel = jnp.where(ok_f, sp - f_tid * tile, tile)
+    vals = jnp.zeros((t_total + 1, m_rows, tile + 1), jnp.float32)
+    vals = vals.at[
+        jnp.where(ok_f, f_tid, t_total), jnp.clip(slot_f, 0, m_rows - 1), rel
+    ].add(jnp.where(ok_f, sv, 0.0))
+    vals = vals[:, :, :tile]
 
-    # sentinel tile
-    rows = jnp.concatenate([rows, jnp.full((1, m_rows), n, jnp.int32)], axis=0)
-    vals = jnp.concatenate([vals, jnp.zeros((1, m_rows, tile), jnp.float32)], axis=0)
     counts = jnp.concatenate([counts, jnp.zeros((1,), jnp.int32)])
 
     return TileIndex(
@@ -203,13 +209,15 @@ def max_rows_bound(
     d = s_block.dim
     valid = idx < d
     p_idx = np.where(valid, (rank[np.minimum(idx, d - 1)] if rank is not None else idx), d)
-    order = np.argsort(p_idx, axis=1, kind="stable")
-    sp = np.take_along_axis(p_idx, order, axis=1)
-    sval = sp < d
     t_total = num_tiles(d, tile)
     if min_prune_score == -np.inf or maxw is None:
+        # threshold-free (IIB / superset) bound: no crossing walk, no sort
+        sp, sval = p_idx, valid
         crossing = np.zeros(idx.shape[0], np.int64)
     else:
+        order = np.argsort(p_idx, axis=1, kind="stable")
+        sp = np.take_along_axis(p_idx, order, axis=1)
+        sval = sp < d
         m = np.where(valid, maxw[np.minimum(idx, d - 1)], 0.0)
         ms = np.take_along_axis(m * val, order, axis=1)
         cum = np.cumsum(np.where(sval, ms, 0.0), axis=1)
@@ -258,6 +266,57 @@ def tile_scores(
     acc = jnp.zeros((n_r, index.num_s + 1), jnp.float32)
     acc, _ = jax.lax.scan(body, acc, active_tiles)
     return acc[:, : index.num_s]
+
+
+def masked_tile_scores(
+    r_dense_tiles: jax.Array,    # (T, |Br|, tile) — permuted-dim dense tiles of B_r
+    index: TileIndex,
+    active_tiles: jax.Array,     # (A,) int32 tile ids; pad with n_tiles (sentinel)
+    keep: jax.Array,             # (|Bs|, T) bool — entry (s, t) survives the threshold
+) -> Tuple[jax.Array, jax.Array]:
+    """IIIB threshold refinement as an on-device mask over a superset index.
+
+    ``index`` is a threshold-FREE index (every feature indexed); ``keep``
+    encodes the live MinPruneScore refinement (``prefix_bound > threshold``
+    per (row, tile) — see core/iiib.py).  Returns two (|Br|, |Bs|) score
+    accumulators from the SAME per-tile matmuls:
+
+      kept: Σ over unmasked entries — the paper's indexed-feature score A,
+            what the candidate test (Theorem 1 + bound check) reads;
+      full: Σ over ALL entries — since the superset index holds every
+            feature, this is the exact dot product, which is what survives
+            into the top-k (the paper's candidate completion, without a
+            separate rescue pass: the "unindexed" mass is already sitting
+            in the masked-out slots of the same lists).
+
+    One matmul per tile either way — the mask costs one select + one extra
+    scatter-add, not extra MXU work.
+    """
+    n_r = r_dense_tiles.shape[1]
+    t_total = r_dense_tiles.shape[0]
+    r_pad = jnp.concatenate(
+        [r_dense_tiles, jnp.zeros((1,) + r_dense_tiles.shape[1:], r_dense_tiles.dtype)], axis=0
+    )
+    # sentinel row (id num_s) and sentinel tile column: never kept
+    kp = jnp.zeros((index.num_s + 1, t_total + 1), bool)
+    kp = kp.at[: index.num_s, :t_total].set(keep)
+
+    def body(accs, t):
+        acc_kept, acc_full = accs
+        rt = r_pad[t]                       # (|Br|, tile)
+        v = index.vals[t]                   # (M, tile)
+        p = jax.lax.dot_general(
+            rt, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                   # (|Br|, M)
+        rows_t = index.rows[t]
+        keep_t = kp[rows_t, jnp.minimum(t, t_total)]
+        acc_full = acc_full.at[:, rows_t].add(p)
+        acc_kept = acc_kept.at[:, rows_t].add(jnp.where(keep_t[None, :], p, 0.0))
+        return (acc_kept, acc_full), None
+
+    acc0 = jnp.zeros((n_r, index.num_s + 1), jnp.float32)
+    (acc_kept, acc_full), _ = jax.lax.scan(body, (acc0, acc0), active_tiles)
+    return acc_kept[:, : index.num_s], acc_full[:, : index.num_s]
 
 
 def dense_r_tiles(r_block: SparseBatch, rank: Optional[jax.Array], tile: int = DEFAULT_TILE) -> jax.Array:

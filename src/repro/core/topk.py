@@ -76,6 +76,16 @@ def prune_scores(state: TopKState) -> jax.Array:
     return state.scores[:, -1]
 
 
-def min_prune_score(state: TopKState) -> jax.Array:
-    """Scalar MinPruneScore = min_{r in block} pruneScore(r) (IIIB threshold)."""
-    return jnp.min(prune_scores(state))
+def min_prune_score(state: TopKState, valid: jax.Array | None = None) -> jax.Array:
+    """Scalar MinPruneScore = min_{r in block} pruneScore(r) (IIIB threshold).
+
+    ``valid`` masks padding rows out of the min: a padded row's prune score
+    stays -inf forever (it never accrues candidates), which would pin the
+    threshold at -inf and silently disable pruning for any partial block.
+    Excluding rows that never offer candidates is sound — the threshold
+    only needs to lower-bound the pruneScore of rows that DO offer.
+    """
+    ps = prune_scores(state)
+    if valid is not None:
+        ps = jnp.where(valid, ps, jnp.inf)
+    return jnp.min(ps)

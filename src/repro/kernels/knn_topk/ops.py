@@ -17,7 +17,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.topk import TopKState, init_topk, pad_topk_state
+from repro.core.topk import TopKState, init_topk, min_prune_score, pad_topk_state
 from repro.kernels.knn_score.ops import _pad_rows, active_lists, dense_tiles_with_sentinel
 from repro.kernels.knn_topk.kernel import knn_topk_pallas
 from repro.sparse.format import SparseBatch, tile_occupancy
@@ -56,7 +56,13 @@ def knn_topk(
     interpret: bool = True,
 ) -> TopKState:
     """Merge B_s's candidates into ``state`` (or a fresh k-state) — exact,
-    identical scores AND ids to scoring densely then ``topk_update``."""
+    identical scores AND ids to scoring densely then ``topk_update``.
+
+    The carried state's MinPruneScore seeds the kernel's threshold, so a
+    chained stream of S blocks prunes later blocks with the earlier blocks'
+    results (the paper's "previous loops prune forthcoming loops") —
+    results are bit-identical with or without the threshold.
+    """
     assert r_block.dim == s_block.dim
     n_r, n_s = r_block.num_vectors, s_block.num_vectors
     if state is None:
@@ -64,6 +70,7 @@ def knn_topk(
             raise ValueError("pass k or an initial state")
         state = init_topk(n_r, k)
 
+    thr = min_prune_score(state).reshape(1, 1)   # lower-bounds every row's k-th
     r_tiles = _pad_rows(dense_tiles_with_sentinel(r_block, tile), block_r)
     s_tiles = _pad_rows(dense_tiles_with_sentinel(s_block, tile), block_s)
     nr_pad, ns_pad = r_tiles.shape[1], s_tiles.shape[1]
@@ -72,8 +79,9 @@ def knn_topk(
     active = jnp.asarray(active_lists(r_occ, s_occ, block_r, block_s))
     valid, ids = column_meta(n_s, ns_pad, s_offset=s_offset, s_valid=s_valid)
     init_s, init_i = pad_state(state, nr_pad)
-    out_s, out_i = knn_topk_pallas(
+    out_s, out_i, _ = knn_topk_pallas(
         r_tiles, s_tiles, active, valid, ids, init_s, init_i,
+        thr=thr, nr_valid=jnp.full((1,), n_r, jnp.int32),
         block_r=block_r, block_s=block_s, interpret=interpret,
     )
     return TopKState(scores=out_s[:n_r], ids=out_i[:n_r])

@@ -6,11 +6,17 @@ Exactly the path the fused kernel replaces — the full score matrix via
 reproduce its scores AND ids bit-for-bit (ties resolve identically: the
 insertion body favours incumbents, top_k on a [state, candidates] concat
 favours earlier columns).
+
+Mirrors the kernel's threshold plumbing: candidates ≤ the r-block's live
+MinPruneScore are masked (provably unable to enter any row's top-k, so
+scores/ids are unchanged by construction) and the per-r-block threshold is
+returned alongside the state, so ``thr_out`` is testable bit-for-bit too.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.knn_score.ref import knn_score_ref
 from repro.kernels.topk_merge.ref import topk_merge_ref
@@ -26,6 +32,8 @@ def knn_topk_ref(
     s_ids: jax.Array,      # (1, NS) int32
     init_scores: jax.Array,  # (NR, k)
     init_ids: jax.Array,     # (NR, k)
+    thr: jax.Array | None = None,       # (1, 1) f32
+    nr_valid: jax.Array | None = None,  # (1,) i32
     block_r: int = 256,
     block_s: int = 256,
 ):
@@ -33,10 +41,28 @@ def knn_topk_ref(
     n_s = s_tiles.shape[1]
     scores = knn_score_ref(r_tiles, s_tiles, active, block_r=block_r, block_s=block_s)
     valid = s_valid[0] > 0
-    masked = jnp.where((scores > 0.0) & valid[None, :], scores, NEG_INF)
-    st_s, st_i = init_scores, init_ids
-    for j0 in range(0, n_s, block_s):
-        chunk = masked[:, j0 : j0 + block_s]
-        ids = jnp.broadcast_to(s_ids[0, j0 : j0 + block_s][None, :], chunk.shape)
-        st_s, st_i = topk_merge_ref(st_s, st_i, chunk, ids)
-    return st_s, st_i
+    thr0 = float(np.asarray(thr).ravel()[0]) if thr is not None else float(NEG_INF)
+    nrv = int(np.asarray(nr_valid)[0]) if nr_valid is not None else n_r
+    out_s, out_i, thr_out = [], [], []
+    for i0 in range(0, n_r, block_r):
+        st_s, st_i = init_scores[i0 : i0 + block_r], init_ids[i0 : i0 + block_r]
+        th = thr0
+        rows = i0 + np.arange(block_r)
+        for j0 in range(0, n_s, block_s):
+            chunk = scores[i0 : i0 + block_r, j0 : j0 + block_s]
+            ok = (chunk > 0.0) & valid[j0 : j0 + block_s][None, :] & (chunk > th)
+            if not bool(jnp.any(ok)):
+                continue          # the kernel's fully-pruned-block early exit
+            masked = jnp.where(ok, chunk, NEG_INF)
+            ids = jnp.broadcast_to(s_ids[0, j0 : j0 + block_s][None, :], chunk.shape)
+            st_s, st_i = topk_merge_ref(st_s, st_i, masked, ids)
+            kth = np.asarray(st_s[:, -1])
+            th = float(np.min(np.where(rows < nrv, kth, np.inf)))
+        out_s.append(st_s)
+        out_i.append(st_i)
+        thr_out.append(th)
+    return (
+        jnp.concatenate(out_s, axis=0),
+        jnp.concatenate(out_i, axis=0),
+        jnp.asarray(thr_out, jnp.float32).reshape(-1, 1),
+    )

@@ -72,16 +72,23 @@ def test_iib_index_built_once_across_queries(small_rs):
     _check_oracle(np.asarray(r2.scores), osc[:24])
 
 
-def test_iiib_rebuilds_are_threshold_only(small_rs):
-    """IIIB rebuilds its refinement per (B_r, B_s) pair — and that count is
-    visible, per pair, not hidden."""
+def test_iiib_superset_built_once(small_rs):
+    """The IIIB superset index is threshold-independent: built once per S
+    block at build() time, and NO query ever rebuilds it (the refinement is
+    an on-device mask)."""
     R, S = small_rs
     spec = JoinSpec(k=5, algorithm="iiib", r_block=24, s_block=32)
     index = SparseKNNIndex.build(S, spec)
-    assert index.stats.index_builds == 0  # nothing cacheable built up front
-    stats = JoinStats()
-    index.query(R, stats=stats)
-    assert stats.index_builds == 2 * 3  # ceil(48/24) r-blocks x 3 s-blocks
+    assert index.stats.index_builds == index.num_blocks  # built up front
+    q1, q2 = JoinStats(), JoinStats()
+    index.query(R, stats=q1)
+    index.query(R, stats=q2)
+    assert q1.index_builds == 0 and q2.index_builds == 0
+    assert index.stats.index_builds == index.num_blocks  # independent of queries
+    # streaming mode keeps the legacy per-pair profile (the parity reference)
+    stream = JoinStats()
+    SparseKNNIndex.build(S, spec, cache_device_blocks=False).query(R, stats=stream)
+    assert stream.index_builds == 2 * 3  # ceil(48/24) r-blocks x 3 s-blocks
 
 
 def test_extend_matches_concatenated_build(small_rs):
@@ -142,12 +149,12 @@ def test_scanned_driver_matches_per_pair_loop(small_rs, algorithm):
     np.testing.assert_array_equal(np.asarray(res.scores), np.asarray(res_stream.scores))
     np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(res_stream.ids))
     r_blocks, s_blocks = 2, 3
-    if algorithm in ("bf", "iib"):
-        assert scanned.device_dispatches == r_blocks          # one scan per R block
-        assert scanned.host_syncs == r_blocks                 # result pulls only
-        assert legacy.device_dispatches >= r_blocks * s_blocks
-    else:  # iiib is per-pair either way, but its threshold sync is hoisted
-        assert scanned.host_syncs < legacy.host_syncs
+    assert scanned.device_dispatches == r_blocks              # one scan per R block
+    assert scanned.host_syncs == r_blocks                     # result pulls only
+    assert legacy.device_dispatches >= r_blocks * s_blocks
+    if algorithm == "iiib":
+        # same pruned-work accounting in both drivers
+        assert scanned.list_entries == legacy.list_entries
 
 
 def test_fused_kernel_engine_matches_streaming(small_rs):
@@ -168,16 +175,129 @@ def test_warm_start_seed_varies_sample(small_rs):
     seed stays exact."""
     R, S = small_rs
     osc, _ = oracle_knn(np.asarray(densify(R)), np.asarray(densify(S)), 5)
-    rescued = []
+    traces = []
     for seed in (0, 7):
         spec = JoinSpec(k=5, algorithm="iiib", r_block=24, s_block=20,
                         warm_start=0.2, seed=seed)
         stats = JoinStats()
         res = SparseKNNIndex.build(S, spec).query(R, stats=stats)
         _check_oracle(np.asarray(res.scores), osc)
-        rescued.append((stats.dense_pairs, stats.list_entries))
-    # different samples -> different warm-start/refinement work profiles
-    assert rescued[0] != rescued[1]
+        # the sample seeds MinPruneScore on device: live from the first block
+        assert all(t[0] > -np.inf for t in stats.min_prune_trace)
+        traces.append(np.concatenate(stats.min_prune_trace))
+    # different samples -> different threshold evolutions
+    assert not np.array_equal(traces[0], traces[1])
+
+
+def test_iiib_threshold_monotone_in_carry(small_rs):
+    """The MinPruneScore carried through the scan only ever rises — the
+    invariant that makes masking a sound replacement for rebuilding (masked
+    sets only grow, so no entry is ever wrongly skipped)."""
+    R, S = small_rs
+    for ws in (0.0, 0.2):
+        spec = JoinSpec(k=5, algorithm="iiib", r_block=24, s_block=20,
+                        warm_start=ws)
+        stats = JoinStats()
+        SparseKNNIndex.build(S, spec).query(R, stats=stats)
+        assert len(stats.min_prune_trace) == 2            # one per R block
+        for trace in stats.min_prune_trace:
+            assert trace.shape == (5,)                    # seed + 4 S blocks
+            assert np.all(np.diff(trace) >= 0)
+            assert trace[-1] > -np.inf
+
+
+def test_iiib_threshold_live_on_ragged_r_block(small_rs):
+    """A partial final R block must not pin the threshold at -inf: its
+    padding rows never accrue candidates, so they are excluded from the
+    MinPruneScore reduce (results exact either way — this is a work bug,
+    caught only by the trace)."""
+    R, S = small_rs   # n_r = 48; r_block=20 -> blocks of 20/20/8
+    spec = JoinSpec(k=5, algorithm="iiib", r_block=20, s_block=32)
+    stats = JoinStats()
+    res = SparseKNNIndex.build(S, spec).query(R, stats=stats)
+    assert len(stats.min_prune_trace) == 3
+    for trace in stats.min_prune_trace:
+        assert trace[-1] > -np.inf                        # incl. the ragged block
+    # and still bit-identical to streaming
+    stream = SparseKNNIndex.build(S, spec, cache_device_blocks=False).query(R)
+    np.testing.assert_array_equal(np.asarray(res.scores), np.asarray(stream.scores))
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(stream.ids))
+
+
+def test_iiib_dispatch_shape_stream(small_rs):
+    """A 3-query IIIB stream stays within queries x r_blocks scan dispatches
+    and r_blocks host syncs per query (result pulls only) — the acceptance
+    shape that PR 2 only achieved for BF/IIB."""
+    R, S = small_rs
+    spec = JoinSpec(k=5, algorithm="iiib", r_block=24, s_block=32)
+    index = SparseKNNIndex.build(S, spec)
+    queries, r_blocks = 3, 2
+    total_dispatches = 0
+    for _ in range(queries):
+        stats = JoinStats()
+        index.query(R, stats=stats)
+        total_dispatches += stats.device_dispatches
+        assert stats.host_syncs <= r_blocks
+    assert total_dispatches <= queries * r_blocks
+    assert index.stats.index_builds == index.num_blocks   # not per query
+
+
+def test_iiib_mask_prunes_entries():
+    """On paper-shaped data (high dim, sparse rows) the threshold mask must
+    actually shrink the scored lists below the superset total, and a warm
+    start may only shrink them further."""
+    R = synthetic_sparse(64, dim=4096, nnz_mean=24, nnz_std=6, seed=0)
+    S = synthetic_sparse(256, dim=4096, nnz_mean=24, nnz_std=6, seed=1)
+    kept = {}
+    for ws in (0.0, 0.25):
+        spec = JoinSpec(k=3, algorithm="iiib", r_block=64, s_block=64,
+                        warm_start=ws)
+        index = SparseKNNIndex.build(S, spec)
+        stats = JoinStats()
+        res = index.query(R, stats=stats)
+        superset_total = sum(b.list_total for b in index._blocks)
+        assert stats.list_entries < superset_total
+        kept[ws] = stats.list_entries
+        osc, _ = oracle_knn(np.asarray(densify(R)), np.asarray(densify(S)), 3)
+        _check_oracle(np.asarray(res.scores), osc)
+    assert kept[0.25] <= kept[0.0]
+
+
+def test_iiib_extend_reassembles_stacks(small_rs):
+    """extend() on IIIB: retained superset-stack prefix is padded, never
+    rebuilt (index_builds counts tail blocks only), and the grown index
+    stays exact.  (Bit-equality with a from-scratch build is NOT expected:
+    the superset ordering is frozen at build time by design, while a fresh
+    build ranks with the full datastore's frequencies.)"""
+    R, S = small_rs
+    spec = JoinSpec(k=5, algorithm="iiib", r_block=24, s_block=32)
+    grown = SparseKNNIndex.build(_rows(S, 0, 64), spec)   # 2 full blocks
+    assert grown.stats.index_builds == 2
+    grown.extend(_rows(S, 64, 80))                        # aligned tail: 1 new block
+    assert grown.stats.index_builds == 3                  # tail only, prefix padded
+    res = grown.query(R)
+    osc, _ = oracle_knn(np.asarray(densify(R)), np.asarray(densify(S)), 5)
+    _check_oracle(np.asarray(res.scores), osc)
+    # the frozen rank also keeps cached and streaming modes in lockstep
+    stream = SparseKNNIndex.build(_rows(S, 0, 64), spec, cache_device_blocks=False)
+    stream.extend(_rows(S, 64, 80))
+    rs = stream.query(R)
+    np.testing.assert_array_equal(np.asarray(res.scores), np.asarray(rs.scores))
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(rs.ids))
+
+
+@pytest.mark.parametrize("algorithm,use_kernel", [("bf", False), ("iib", True)])
+def test_extend_reuses_device_stacks(small_rs, algorithm, use_kernel):
+    """extend() reassembles the BF/kernel device stacks by concatenating the
+    retained prefix — query results match a from-scratch build exactly."""
+    R, S = small_rs
+    spec = JoinSpec(k=5, algorithm=algorithm, r_block=24, s_block=32,
+                    use_kernel=use_kernel)
+    grown = SparseKNNIndex.build(_rows(S, 0, 64), spec).extend(_rows(S, 64, 80))
+    full = SparseKNNIndex.build(S, spec)
+    ra, rb = grown.query(R), full.query(R)
+    np.testing.assert_array_equal(np.asarray(ra.scores), np.asarray(rb.scores))
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
 
 
 def test_planner_cost_model_ordering():
@@ -185,6 +305,9 @@ def test_planner_cost_model_ordering():
     spec = JoinSpec(k=5)
     sparse = plan((1000, 8, 10_000), (1000, 8, 10_000), spec)
     assert sparse.cost_iib < sparse.cost_bf
+    # no per-pair rebuild charge: the superset index is built once at build()
+    # and masking can only shrink the scored mass
+    assert sparse.cost_iiib <= sparse.cost_iib
     assert sparse.algorithm == "iiib"  # indexed side wins → threshold-refined
     dense = plan((1000, 5000, 10_000), (1000, 5000, 10_000), spec)
     assert dense.cost_bf <= dense.cost_iib

@@ -86,6 +86,60 @@ def test_knn_topk_masked_columns():
     assert not np.isin(np.asarray(st.ids), np.nonzero(~s_valid)[0]).any()
 
 
+def test_knn_topk_threshold_inert_and_tracked():
+    """The threshold input/output: results are bit-identical with the
+    threshold on or off (masked candidates provably cannot enter any row's
+    top-k), and thr_out reports the live per-r-block MinPruneScore."""
+    nr, ns, dim, tile, br, bs, k = 70, 90, 640, 128, 64, 32, 5
+    R = synthetic_sparse(nr, dim=dim, nnz_mean=15, nnz_std=4, seed=160)
+    S = synthetic_sparse(ns, dim=dim, nnz_mean=15, nnz_std=4, seed=6300)
+    r_tiles, s_tiles, active = _arrays(R, S, tile, br, bs)
+    nr_pad, ns_pad = r_tiles.shape[1], s_tiles.shape[1]
+    valid, ids = column_meta(ns, ns_pad)
+    init_s, init_i = pad_state(init_topk(nr, k), nr_pad)
+    nrv = jnp.full((1,), nr, jnp.int32)
+
+    off = knn_topk_pallas(r_tiles, s_tiles, active, valid, ids, init_s, init_i,
+                          block_r=br, block_s=bs, interpret=True)     # thr disabled
+    on = knn_topk_pallas(r_tiles, s_tiles, active, valid, ids, init_s, init_i,
+                         thr=jnp.full((1, 1), -jnp.inf, jnp.float32), nr_valid=nrv,
+                         block_r=br, block_s=bs, interpret=True)
+    np.testing.assert_array_equal(np.asarray(off[0]), np.asarray(on[0]))
+    np.testing.assert_array_equal(np.asarray(off[1]), np.asarray(on[1]))
+
+    ref = knn_topk_ref(r_tiles, s_tiles, active, valid, ids, init_s, init_i,
+                       thr=jnp.full((1, 1), -jnp.inf, jnp.float32), nr_valid=nrv,
+                       block_r=br, block_s=bs)
+    np.testing.assert_array_equal(np.asarray(on[0]), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(on[1]), np.asarray(ref[1]))
+    np.testing.assert_array_equal(np.asarray(on[2]), np.asarray(ref[2]))
+    # thr_out == min over each r-block's VALID rows of the k-th best score
+    out_s = np.asarray(on[0])
+    rows_valid = np.arange(nr_pad) < nr
+    for bi in range(nr_pad // br):
+        kth = out_s[bi * br : (bi + 1) * br, -1]
+        vm = rows_valid[bi * br : (bi + 1) * br]
+        expect = np.min(np.where(vm, kth, np.inf))
+        assert np.asarray(on[2])[bi, 0] == np.float32(expect)
+
+
+def test_knn_topk_warm_threshold_preserves_results():
+    """Seeding thr from a warm state must not change scores or ids — the
+    early exit only skips candidates that could never be inserted."""
+    R = synthetic_sparse(40, dim=512, nnz_mean=14, seed=2)
+    S = synthetic_sparse(64, dim=512, nnz_mean=14, seed=3)
+    k = 7
+    warm = knn_topk(R, _rows(S, 0, 32), k=k, block_r=32, block_s=32)
+    # chained call seeds thr = min_prune_score(warm) internally (ops.py)
+    st = knn_topk(R, _rows(S, 32, 64), state=warm, s_offset=32, block_r=32, block_s=32)
+    sc = knn_score(R, S, block_r=32, block_s=32)
+    masked = jnp.where(sc > 0, sc, -jnp.inf)
+    ref = topk_update(init_topk(40, k), masked[:, :32], jnp.arange(32, dtype=jnp.int32))
+    ref = topk_update(ref, masked[:, 32:], 32 + jnp.arange(32, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(st.scores), np.asarray(ref.scores))
+    np.testing.assert_array_equal(np.asarray(st.ids), np.asarray(ref.ids))
+
+
 def test_knn_topk_chained_state_ragged_blocks():
     """Streaming S through two ragged chunks with carried state == one-shot
     merge of everything (the engine's online-state invariant)."""
