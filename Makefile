@@ -3,18 +3,24 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: check test smoke bench bench-compare
 
-# tier-1 verify + engine smoke (index reuse + dispatch shape observable on CPU)
+# tier-1 verify + engine/store smoke (index reuse + dispatch shape on CPU;
+# the multi-device store suite — tests/test_store.py, tests/test_distributed.py
+# — runs inside `test` via subprocesses that force virtual CPU devices)
 check: test smoke
 
 test:
 	$(PYTHON) -m pytest -x -q
 
+# 4 forced virtual CPU devices so the store smoke exercises a real fan-out
 smoke:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 	$(PYTHON) -m benchmarks.run --smoke
 
-# machine-readable perf record for the PR trajectory (BENCH_*.json)
+# machine-readable perf record for the PR trajectory (BENCH_*.json);
+# store streams record per-shard dispatch/sync counts on a 4-shard fan-out
 bench:
-	$(PYTHON) -m benchmarks.run --fast --out BENCH_PR3.json
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+	$(PYTHON) -m benchmarks.run --fast --out BENCH_PR5.json
 
 # fail if any algorithm regressed its dispatch/sync/index-build shape vs the
 # previous BENCH_*.json record (wall times are informational only)

@@ -97,6 +97,44 @@ def run_repeated_query(R, S, k, algorithm, queries=3, r_block=None, s_block=None
     }
 
 
+def run_store_query(R, S, k, algorithm, queries=3, r_block=None, s_block=None,
+                    num_shards=None):
+    """Sharded-store serving shape: build one index stack per shard, query
+    ``queries`` times, report the fan-out dispatch shape (one device
+    dispatch + one host sync per R block, regardless of shard count) and
+    the per-shard build footprint."""
+    import jax
+
+    from repro.store import ShardedKNNStore
+
+    spec = _spec(R, S, k, algorithm, r_block, s_block)
+    shards = min(num_shards or jax.device_count(), jax.device_count())
+    store = ShardedKNNStore.build(S, spec, num_shards=shards)
+    build_indexes = store.stats.index_builds
+    query_s, dispatches, syncs, entries = [], [], [], []
+    for _ in range(queries):
+        stats = JoinStats()
+        _, dt = timed(store.query, R, stats=stats)
+        query_s.append(round(dt, 4))
+        dispatches.append(stats.device_dispatches)
+        syncs.append(stats.host_syncs)
+        entries.append(stats.list_entries)
+    return {
+        "build_s": round(store.stats.build_wall_s, 4),
+        "query_s": query_s,
+        "device_dispatches": dispatches,
+        "host_syncs": syncs,
+        "list_entries": entries,
+        "r_blocks": -(-R.num_vectors // (spec.r_block or R.num_vectors)),
+        "s_blocks": store.num_blocks,
+        "index_builds": store.stats.index_builds,
+        "query_index_builds": store.stats.index_builds - build_indexes,
+        "shards": store.n_shards,
+        "shard_rows": store.shard_rows,
+        "shard_blocks": [s.num_blocks for s in store.shards],
+    }
+
+
 def work_counters(R, S, k, r_block, s_block) -> Dict[str, Dict]:
     """Machine-independent cost-model counters (paper C2 vs C3)."""
     out = {}

@@ -38,7 +38,7 @@ def smoke() -> int:
         or host syncs beyond the one per-R-block result pull (i.e. a
         per-pair host round-trip crept back in).
     """
-    from benchmarks.common import gen, run_repeated_query
+    from benchmarks.common import gen, run_repeated_query, run_store_query
 
     R = gen("synthetic", 96, seed=0, dim=2048, nnz=24)
     S = gen("synthetic", 160, seed=1, dim=2048, nnz=24)
@@ -56,6 +56,18 @@ def smoke() -> int:
         }
         ok &= all(c.values())
         checks[algorithm] = {"smoke": out, **c}
+    # sharded store: same dispatch shape per query (O(R-blocks), NOT
+    # O(R-blocks x shards)) and zero query-time index builds
+    out = run_store_query(R, S, k=5, algorithm="iib", queries=queries,
+                          r_block=48, s_block=64)
+    c = {
+        "store_no_query_builds_ok": out["query_index_builds"] == 0,
+        "store_dispatch_ok":
+            sum(out["device_dispatches"]) <= queries * out["r_blocks"],
+        "store_sync_ok": all(h <= out["r_blocks"] for h in out["host_syncs"]),
+    }
+    ok &= all(c.values())
+    checks["store"] = {"smoke": out, **c}
     print(json.dumps(checks))
     return 0 if ok else 1
 
@@ -67,7 +79,7 @@ def perf_record(fast: bool, out_path: str) -> int:
     path).  Machine-readable so successive PRs can be diffed."""
     import jax
 
-    from benchmarks.common import gen, run_repeated_query
+    from benchmarks.common import gen, run_repeated_query, run_store_query
 
     n_r, n_s, dim, nnz = (128, 512, 4096, 32) if fast else (256, 2048, 8192, 64)
     r_block, s_block, k, queries = n_r // 2, n_s // 4, 5, 3
@@ -87,6 +99,17 @@ def perf_record(fast: bool, out_path: str) -> int:
         )
         print(f"{name}: query_s={streams[name]['query_s']} "
               f"dispatches={streams[name]['device_dispatches']}", flush=True)
+    # sharded store streams (shards = local devices; `make bench` forces 4
+    # virtual CPU devices so the record captures a real fan-out)
+    for algorithm in ("bf", "iib", "iiib"):
+        name = f"store_{algorithm}"
+        streams[name] = run_store_query(
+            R, S, k=k, algorithm=algorithm, queries=queries,
+            r_block=r_block, s_block=s_block,
+        )
+        print(f"{name}: query_s={streams[name]['query_s']} "
+              f"dispatches={streams[name]['device_dispatches']} "
+              f"shards={streams[name]['shards']}", flush=True)
 
     record = {
         "config": {

@@ -1,4 +1,4 @@
-"""kNN-LM style retrieval-augmented serving.
+"""kNN-LM style retrieval-augmented serving over the MUTABLE datastore.
 
 Decode-time hidden states join (as R) against a datastore of hidden-state
 keys (as S, sparse-ified by top-magnitude truncation — the standard trick
@@ -8,10 +8,14 @@ re-weight the LM distribution:
     p(y) = (1 - lam) * p_LM(y) + lam * softmax_knn(y)
 
 This is the framework's KNN join running as a serving-side primitive
-(DESIGN.md §4): the datastore index is built ONCE (SparseKNNIndex.build)
-and every decode step is just a query against the cached block indexes —
-O(S-blocks) index builds for the whole generation instead of
-O(steps x S-blocks).
+(DESIGN.md §4 and §Sharded store): the datastore lives in a
+ShardedKNNStore — indexes built once per shard (a 1-shard store on a
+one-device host; the same script fans out under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) — and the store
+stays MUTABLE while serving: every generated token's (hidden-state key →
+next token) pair is ``add()``-ed back with a TTL, expired entries are
+tombstoned per step without any index rebuild, and ``delete()`` evicts
+ids on demand.
 
   PYTHONPATH=src python examples/knnlm_serve.py
 """
@@ -20,10 +24,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config
-from repro.core import JoinSpec, SparseKNNIndex
+from repro.core import JoinSpec
 from repro.launch.serve import Request, Server
 from repro.models import model as M
 from repro.sparse.format import SparseBatch
+from repro.store import ShardedKNNStore
 
 
 def sparsify(h: np.ndarray, keep: int = 32) -> SparseBatch:
@@ -53,15 +58,19 @@ def main():
     datastore = sparsify(keys)
 
     lam, k = 0.3, 8
-    # build the datastore index ONCE; IIB's tile indexes are threshold-free
-    # so every decode-step query reuses them as-is
-    index = SparseKNNIndex.build(datastore, JoinSpec(k=k, algorithm="iib"))
+    # build the sharded datastore ONCE (every local device holds one shard
+    # of S); decode-step queries fan out against the cached per-shard
+    # stacks, and the store stays mutable while serving
+    store = ShardedKNNStore.build(datastore, JoinSpec(k=k, algorithm="iib"))
+    values = list(values)           # grows with the datastore
+    ttl_steps = 6                   # generated entries live this many steps
 
     # ---- serve one request with kNN interpolation -----------------------
     prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
     req = Request(0, prompt, max_new=8)
     assert srv.admit(req)
     n_queries = 0
+    step = 0
     generated = [req.out[-1]]
     while srv.occupancy():
         s = 0  # single slot
@@ -77,7 +86,7 @@ def main():
         qh, _ = M.hidden_states(srv.params, cfg, {"tokens": qtok})
         query = sparsify(np.asarray(qh[:, -1]).astype(np.float32))
 
-        res = index.query(query)
+        res = store.query(query)
         n_queries += 1
         ids = np.asarray(res.ids[0])
         scores = np.asarray(res.scores[0])
@@ -98,14 +107,33 @@ def main():
         srv.slot_tok[s, 0] = nxt
         srv.slot_pos[s] += 1
         req.out.append(nxt)
+
+        # ---- mutate the datastore while serving ------------------------
+        # feed the fresh (key -> generated token) pair back with a TTL and
+        # tombstone whatever expired this step — no index rebuild either
+        # way (`query` already holds this step's sparsified hidden state)
+        new_gids = store.add(query, ttl=ttl_steps, now=float(step))
+        values.append(nxt)
+        assert len(values) == int(new_gids[-1]) + 1
+        store.expire(now=float(step))
+        step += 1
+
         if len(req.out) >= req.max_new:
             srv.slot_req[s] = None
+
+    # explicit eviction: drop the two lowest-id seed entries
+    store.delete([0, 1])
+    builds_before = store.stats.index_builds
+    store.query(query)
+    assert store.stats.index_builds == builds_before, "query rebuilt an index!"
 
     print("prompt:   ", prompt.tolist())
     print("generated:", generated)
     print("datastore hits blended with lam =", lam)
-    print(f"datastore index: {index.stats.index_builds} block-index builds "
-          f"for {n_queries} decode-step queries")
+    print(f"datastore: {store.stats.index_builds} block-index builds for "
+          f"{n_queries} decode-step queries over {store.n_shards} shard(s); "
+          f"{store.stats.expired} entries TTL-expired, "
+          f"{store.stats.deleted} deleted, live rows {store.num_vectors}")
 
 
 if __name__ == "__main__":

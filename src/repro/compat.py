@@ -29,3 +29,13 @@ def shard_map(fn, mesh, *, in_specs, out_specs):
     return _shard_map(
         fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
     )
+
+
+def shard_put(x, mesh, spec):
+    """``device_put`` onto a mesh with a PartitionSpec, across jax versions
+    (NamedSharding lives at ``jax.sharding`` on every generation we support,
+    but routing placement through here keeps the store/mesh code free of
+    direct sharding-API imports)."""
+    from jax.sharding import NamedSharding
+
+    return jax.device_put(x, NamedSharding(mesh, spec))

@@ -9,7 +9,9 @@ Public API (build-once/query-many engine):
 
 Compat wrappers (one-shot batch joins, identical results):
   knn_join            — block nested-loop join (bf | iib | iiib), host-driven
-  ring_knn_join       — multi-device distributed join (shard_map ring)
+  ring_knn_join       — multi-device distributed join (now backed by the
+                        sharded datastore, repro.store.ShardedKNNStore;
+                        the shard_map ring remains for dim_axis)
 
 Support:
   reference_join      — literal paper algorithms (numpy), ground truth

@@ -45,6 +45,19 @@ def bf_block_scores(
     return jax.lax.fori_loop(0, n_chunks, body, acc)
 
 
+def block_ids(s_offset: jax.Array | int, num_s: int) -> jax.Array:
+    """(num_s,) global ids of a block's columns.
+
+    ``s_offset`` is either the scalar global id of the block's first row
+    (contiguous blocks — the engine's layout) or an explicit ``(num_s,)``
+    id array (the sharded store's layout, where ``add()`` interleaves
+    global id ranges across shards).
+    """
+    if jnp.ndim(s_offset) == 0:
+        return s_offset + jnp.arange(num_s, dtype=jnp.int32)
+    return s_offset.astype(jnp.int32)
+
+
 def bf_join_block(
     state: TopKState,
     r_block: SparseBatch,
@@ -55,30 +68,33 @@ def bf_join_block(
 ) -> TopKState:
     """One (B_r, B_s) BF join step: score everything, merge into top-k.
 
-    ``s_offset`` maps block-local S columns to global ids.  ``s_valid``
-    masks padding rows of a partial final block.
+    ``s_offset`` maps block-local S columns to global ids (scalar first-row
+    id or per-row id array).  ``s_valid`` masks padding rows of a partial
+    final block and tombstoned (deleted / TTL-expired) rows.
     """
     scores = bf_block_scores(r_block, s_block, dim_chunk=dim_chunk)
-    ids = s_offset + jnp.arange(s_block.num_vectors, dtype=jnp.int32)
+    ids = block_ids(s_offset, s_block.num_vectors)
     if s_valid is not None:
         scores = jnp.where(s_valid[None, :], scores, -jnp.inf)
     return topk_update(state, scores, ids)
 
 
 @partial(jax.jit, static_argnames=("dim",))
-def bf_scan_join(state, r_block, s_idx, s_val, s_nnz, s_starts, s_valid, dim):
+def bf_scan_join(state, r_block, s_idx, s_val, s_nnz, s_ids, s_valid, dim):
     """BF inner loop over ALL stacked S blocks as one ``lax.scan``.
 
     The device-resident form of Algorithm 1's S loop: the engine stacks its
     cached S blocks into ``(B, s_block, …)`` batched arrays at build time
     and the whole S side of one R block is this single dispatch, carrying
     the TopKState — no per-(B_r, B_s)-pair launches or host syncs.
+    ``s_ids`` is the (B, s_block) global-id stack (per-row, so the sharded
+    store can scan blocks whose ids are not contiguous).
     """
 
     def body(st, xs):
-        bi, bv, bn, off, vm = xs
+        bi, bv, bn, ids, vm = xs
         blk = SparseBatch(indices=bi, values=bv, nnz=bn, dim=dim)
-        return bf_join_block(st, r_block, blk, off, vm), None
+        return bf_join_block(st, r_block, blk, ids, vm), None
 
-    state, _ = jax.lax.scan(body, state, (s_idx, s_val, s_nnz, s_starts, s_valid))
+    state, _ = jax.lax.scan(body, state, (s_idx, s_val, s_nnz, s_ids, s_valid))
     return state

@@ -77,10 +77,30 @@ from repro.sparse.format import SparseBatch, num_tiles
 # planner constants: the pair-score accumulator of one (B_r, B_s) pair is
 # bounded to ~64 MiB of f32, and the C3 (indexed) cost carries a per-list-
 # entry overhead factor vs C2's dense MXU throughput (scatter-add + gather
-# against a full-rate matmul).
+# against a full-rate matmul).  The hard-coded unit costs can be replaced
+# by measured ones: ``benchmarks/roofline.py --calibrate out.json`` writes
+# a calibration record and ``plan(..., calibration=...)`` consumes it.
 PAIR_BUDGET = 1 << 24
 DEFAULT_S_BLOCK = 4096
 INDEX_COST_FACTOR = 4.0
+
+
+def load_calibration(calibration) -> Optional[dict]:
+    """Resolve a planner calibration: ``None``, a dict, or a JSON file path.
+
+    Recognised keys (all optional):
+      c2_unit_s          — measured seconds per dense C2 work unit
+                           (one scored dim-tile lane of one (r, s) pair)
+      c3_unit_s          — measured seconds per indexed C3 work unit
+      index_cost_factor  — c3_unit_s / c2_unit_s (used when only the ratio
+                           was recorded); defaults to INDEX_COST_FACTOR
+    """
+    if calibration is None or isinstance(calibration, dict):
+        return calibration
+    import json
+
+    with open(calibration) as f:
+        return json.load(f)
 
 
 @dataclasses.dataclass
@@ -145,13 +165,20 @@ def _shape_stats(shape) -> Tuple[int, float, int]:
     return int(n), float(nnz), int(dim)
 
 
-def plan(r_shape, s_shape, spec: JoinSpec, occupied_tiles: Optional[int] = None) -> JoinPlan:
+def plan(
+    r_shape, s_shape, spec: JoinSpec,
+    occupied_tiles: Optional[int] = None,
+    calibration=None,
+) -> JoinPlan:
     """Resolve algorithm and block geometry from the C2/C3 cost model.
 
     ``r_shape``/``s_shape`` are SparseBatch instances or (n, mean_nnz, dim)
     tuples.  ``occupied_tiles`` optionally narrows the tile universe to the
     tiles S actually touches (from cached dim-frequency statistics —
     concentrated data occupies far fewer tiles than the uniform model).
+    ``calibration`` (dict or JSON path from ``benchmarks/roofline.py
+    --calibrate``) replaces the hard-coded unit costs with measured ones,
+    turning the cost estimates into wall-second predictions.
 
     C2 (BF): every dim-tile of every (r, s) pair is multiplied, cost
     ``n_r * n_s * D_padded``.  C3 (IIB/IIIB): per active tile the matmul is
@@ -170,8 +197,13 @@ def plan(r_shape, s_shape, spec: JoinSpec, occupied_tiles: Optional[int] = None)
     t_eff = max(1, min(occupied_tiles, t)) if occupied_tiles else t
     # E[#tiles one S row touches] under uniform placement over occupied tiles
     tiles_per_s_row = t_eff * (1.0 - (1.0 - 1.0 / t_eff) ** max(f_s, 0.0))
-    cost_bf = float(n_r) * n_s * t * spec.tile
-    cost_iib = INDEX_COST_FACTOR * float(n_r) * n_s * tiles_per_s_row * spec.tile
+    cal = load_calibration(calibration) or {}
+    c2_unit = float(cal.get("c2_unit_s", 1.0))
+    c3_unit = float(
+        cal.get("c3_unit_s", c2_unit * cal.get("index_cost_factor", INDEX_COST_FACTOR))
+    )
+    cost_bf = c2_unit * float(n_r) * n_s * t * spec.tile
+    cost_iib = c3_unit * float(n_r) * n_s * tiles_per_s_row * spec.tile
     cost_iiib = cost_iib
 
     if spec.algorithm is not None:
@@ -304,6 +336,43 @@ def _interpret_kernels() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def prepare_r_block_inputs(
+    br: SparseBatch,
+    algorithm: str,
+    tile: int,
+    rank_np: Optional[np.ndarray] = None,
+    rank_dev: Optional[jax.Array] = None,
+    with_r_tiles: bool = True,
+) -> dict:
+    """R-side device inputs of one padded R block's scan step.
+
+    The single home of the per-R-block preparation the scanned drivers
+    consume — dense (rank-permuted) R tiles, the host-derived active-tile
+    list, and IIIB's per-tile maxWeight bound.  Shared by the engine's
+    query loop and by :class:`repro.store.ShardedKNNStore`, whose fan-out
+    replicates exactly these inputs to every shard (they depend only on R
+    and on build-frozen datastore statistics, never on the S shard).
+    """
+    t_total = num_tiles(br.dim, tile)
+    if algorithm == "bf":
+        return {}
+    if algorithm == "iib":
+        # the streaming kernel path needs only the active-tile list (the
+        # fused kernel densifies its own R tiles) — with_r_tiles=False
+        # skips the O(T·|Br|·tile) densify + upload
+        occ_any = _host_tile_any(br, tile, t_total)
+        out = {"tiles": jnp.asarray(active_tile_list(occ_any))}
+        if with_r_tiles:
+            out["r_tiles"] = dense_r_tiles(br, None, tile)
+        return out
+    occ_any = _host_tile_any(br, tile, t_total, rank_np)
+    return {
+        "r_tiles": dense_r_tiles(br, rank_dev, tile),
+        "mwt": iiib_mod.maxw_tiles(br, rank_dev, tile),
+        "tiles": jnp.asarray(active_tile_list(occ_any)),
+    }
+
+
 # ---------------------------------------------------------------------------
 # cached S-side stacks (built once, scanned every query)
 # ---------------------------------------------------------------------------
@@ -315,8 +384,8 @@ class _BFStack:
     idx: jax.Array      # (B, s_block, F) int32
     val: jax.Array      # (B, s_block, F) f32
     nnz: jax.Array      # (B, s_block) int32
-    starts: jax.Array   # (B,) int32
-    valid: jax.Array    # (B, s_block) bool
+    ids: jax.Array      # (B, s_block) int32 — per-row global ids
+    valid: jax.Array    # (B, s_block) bool — padding AND tombstoned rows out
 
 
 @dataclasses.dataclass
@@ -326,8 +395,8 @@ class _IIBStack:
     rows: jax.Array     # (B, T+1, M) int32
     vals: jax.Array     # (B, T+1, M, tile) f32
     counts: jax.Array   # (B, T+1) int32
-    starts: jax.Array   # (B,) int32
-    valid: jax.Array    # (B, s_block) bool
+    ids: jax.Array      # (B, s_block) int32 — per-row global ids
+    valid: jax.Array    # (B, s_block) bool — padding AND tombstoned rows out
     max_rows: int       # common static M (max over blocks, bucketed)
 
 
@@ -375,19 +444,33 @@ class SparseKNNIndex:
     one-shot ``knn_join`` wrapper uses this mode.
     """
 
-    def __init__(self, S: SparseBatch, spec: JoinSpec, cache_device_blocks: bool = True):
+    def __init__(
+        self,
+        S: SparseBatch,
+        spec: JoinSpec,
+        cache_device_blocks: bool = True,
+        frozen_rank: Optional[np.ndarray] = None,
+        calibration=None,
+    ):
         t0 = time.perf_counter()
         self.spec = spec
         self._cache_device = cache_device_blocks
         self.dim = S.dim
         self.tile = spec.tile
         self.stats = JoinStats()
+        self.calibration = load_calibration(calibration)
         self._idx = np.asarray(S.indices)
         self._val = np.asarray(S.values)
         self._nnz = np.asarray(S.nnz)
         self.n_s = S.num_vectors
         if self.n_s < 1:
             raise ValueError("S must have at least one row")
+
+        # tombstones: delete()/TTL expiry mark rows dead without touching
+        # the cached stacks — only the valid masks change.  compact() is
+        # the explicit (real) rebuild that reclaims the dead rows.
+        self._alive = np.ones(self.n_s, bool)
+        self._deadline = np.full(self.n_s, np.inf)
 
         # S-side dim statistics, maintained incrementally by extend():
         # dim_freq drives the planner's occupied-tile estimate; max_weight
@@ -398,15 +481,22 @@ class SparseKNNIndex:
 
         f_mean = self._f_mean
         p = plan((self.n_s, f_mean, self.dim), (self.n_s, f_mean, self.dim), spec,
-                 occupied_tiles=self.occupied_tiles)
+                 occupied_tiles=self.occupied_tiles, calibration=self.calibration)
         self.algorithm = spec.algorithm or p.algorithm
         self.s_block = max(1, min(spec.s_block or p.s_block, self.n_s))
 
         # IIIB superset ordering: the datastore's dim-frequency rank, FROZEN
         # at build time — extend() keeps it so retained stack blocks stay
-        # valid (the ordering is a pruning heuristic, not a correctness input)
+        # valid (the ordering is a pruning heuristic, not a correctness
+        # input; refreeze() recomputes it after heavy drift).  The sharded
+        # store passes ``frozen_rank`` so every shard prunes in the GLOBAL
+        # datastore's frequency order, matching a single-device build over
+        # the concatenated S.
         if self.algorithm == "iiib":
-            self._rank_np = iiib_mod.s_frequency_rank(self.dim_freq)
+            self._rank_np = (
+                np.asarray(frozen_rank, np.int32) if frozen_rank is not None
+                else iiib_mod.s_frequency_rank(self.dim_freq)
+            )
             self._rank_dev = jnp.asarray(self._rank_np)
         else:
             self._rank_np = None
@@ -424,11 +514,19 @@ class SparseKNNIndex:
 
     @classmethod
     def build(
-        cls, S: SparseBatch, spec: JoinSpec, cache_device_blocks: bool = True
+        cls,
+        S: SparseBatch,
+        spec: JoinSpec,
+        cache_device_blocks: bool = True,
+        frozen_rank: Optional[np.ndarray] = None,
+        calibration=None,
     ) -> "SparseKNNIndex":
-        return cls(S, spec, cache_device_blocks=cache_device_blocks)
+        return cls(
+            S, spec, cache_device_blocks=cache_device_blocks,
+            frozen_rank=frozen_rank, calibration=calibration,
+        )
 
-    def extend(self, S_new: SparseBatch) -> "SparseKNNIndex":
+    def extend(self, S_new: SparseBatch, deadline=None) -> "SparseKNNIndex":
         """Append rows to S in place, rebuilding only the affected tail blocks.
 
         Equivalent to building from the row-concatenation of the old and new
@@ -436,6 +534,9 @@ class SparseKNNIndex:
         the old tail — if partial — plus the new blocks change).  Stacked
         device arrays are re-assembled by concatenation: the retained prefix
         of the IIB index stack is padded, never rebuilt.
+
+        ``deadline`` optionally attaches a TTL to the new rows: a scalar or
+        per-row array of absolute expiry times consumed by :meth:`expire`.
         """
         if S_new.dim != self.dim:
             raise ValueError(f"dim mismatch: index has {self.dim}, got {S_new.dim}")
@@ -451,9 +552,118 @@ class SparseKNNIndex:
         self._val = np.concatenate([self._val, val2])
         self._nnz = np.concatenate([self._nnz, nnz2])
         self.n_s = old_n + S_new.num_vectors
+        self._alive = np.concatenate([self._alive, np.ones(S_new.num_vectors, bool)])
+        dl = np.full(S_new.num_vectors, np.inf) if deadline is None else (
+            np.broadcast_to(np.asarray(deadline, np.float64), (S_new.num_vectors,))
+        )
+        self._deadline = np.concatenate([self._deadline, dl])
         self._accumulate_dim_stats(idx2)
         self._refresh_plan_stats()
         self._build_blocks(from_block=old_n // self.s_block)
+        self.stats.build_wall_s += time.perf_counter() - t0
+        return self
+
+    # -- mutation: tombstones (delete / TTL) and the real rebuilds -----------
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by global id.  No stack rebuild — only the valid
+        masks change (one host→device upload); results immediately exclude
+        the rows.  Returns the number of newly-dead rows."""
+        ids = np.unique(np.atleast_1d(np.asarray(ids, np.int64)))
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_s):
+            raise IndexError(f"ids out of range [0, {self.n_s})")
+        newly = int(self._alive[ids].sum())
+        self._alive[ids] = False
+        self._refresh_valid()
+        return newly
+
+    def expire(self, now: float) -> int:
+        """Tombstone rows whose TTL deadline has passed (``deadline <= now``).
+        Same no-rebuild semantics as :meth:`delete`."""
+        dead = self._alive & (self._deadline <= now)
+        newly = int(dead.sum())
+        if newly:
+            self._alive[dead] = False
+            self._refresh_valid()
+        return newly
+
+    @property
+    def dead_rows(self) -> int:
+        return self.n_s - int(self._alive.sum())
+
+    @property
+    def live_rows(self) -> int:
+        return int(self._alive.sum())
+
+    def compact(self) -> int:
+        """Physically drop tombstoned rows and rebuild blocks + stacks — the
+        real rebuild that delete()/expire() defer.  Global ids shift to the
+        surviving rows' new positions (callers needing stable ids — the
+        sharded store — keep their own id maps).  A fully-dead datastore
+        compacts to a single still-tombstoned placeholder row (SparseBatch
+        shapes need >= 1 row), so its memory is reclaimed and every query
+        keeps masking it out.  Returns rows removed; the exact surviving
+        row mask is exposed as ``last_compact_keep`` so id-mapping callers
+        (the sharded store) follow this method's choice instead of
+        predicting it."""
+        removed = self.dead_rows
+        if removed == 0:
+            self.last_compact_keep = np.ones(self.n_s, bool)
+            return 0
+        t0 = time.perf_counter()
+        keep = self._alive.copy()
+        stub = not keep.any()
+        if stub:
+            keep[0] = True
+            removed -= 1
+        self.last_compact_keep = keep
+        self._idx = self._idx[keep]
+        self._val = self._val[keep]
+        self._nnz = self._nnz[keep]
+        self._deadline = self._deadline[keep]
+        self.n_s = int(keep.sum())
+        self._alive = np.full(self.n_s, not stub)
+        self.dim_freq = np.zeros(self.dim, np.int64)
+        self._accumulate_dim_stats(self._idx)
+        self._refresh_plan_stats()
+        self._bf_stack = None
+        self._iib_stack = None
+        self._kernel_stack = None
+        self._mass_stack = None
+        self._build_blocks(from_block=0)
+        self.stats.build_wall_s += time.perf_counter() - t0
+        return removed
+
+    def refreeze(self, frozen_rank: Optional[np.ndarray] = None) -> "SparseKNNIndex":
+        """Recompute the IIIB superset dim-frequency rank and reassemble the
+        stacks (ROADMAP open item).  The frozen rank stays *exact* across
+        ``extend()`` drift but prunes less as the datastore's frequency
+        profile shifts; refreezing restores the prune rate at the cost of
+        one full stack rebuild.  Results are unchanged (the rank is a
+        pruning heuristic, not a correctness input).  No-op for BF/IIB,
+        whose indexes carry no frequency ordering.  The sharded store
+        passes ``frozen_rank`` (the global live-row rank) so shards stay
+        in one common order."""
+        if self.algorithm != "iiib":
+            return self
+        t0 = time.perf_counter()
+        if frozen_rank is not None:
+            self._rank_np = np.asarray(frozen_rank, np.int32)
+        else:
+            live_freq = np.zeros(self.dim, np.int64)
+            valid = (self._idx < self.dim) & self._alive[:, None]
+            np.add.at(live_freq, np.where(valid, self._idx, 0).ravel(), valid.ravel())
+            self._rank_np = iiib_mod.s_frequency_rank(live_freq)
+        self._rank_dev = jnp.asarray(self._rank_np)
+        for blk in self._blocks:
+            blk.bound = max_rows_bound(blk.host, self.tile, rank=self._rank_np)
+            blk.tilemass = iiib_mod.tile_mass_host(
+                np.asarray(blk.host.indices), np.asarray(blk.host.values),
+                self.dim, self._rank_np, self.tile,
+            )
+        self._iib_stack = None
+        self._mass_stack = None
+        self._build_stacks(from_block=0)
         self.stats.build_wall_s += time.perf_counter() - t0
         return self
 
@@ -512,11 +722,31 @@ class SparseKNNIndex:
             self._iib_stack = self._stack_iib(from_block, rank=self._rank_dev)
             self._mass_stack = self._stack_mass(from_block)
 
-    def _stack_starts_valid(self) -> Tuple[jax.Array, jax.Array]:
+    def _stack_ids_valid(self) -> Tuple[jax.Array, jax.Array]:
+        """(B, s_block) global-id stack + valid mask (padding AND alive)."""
         b, sb = len(self._blocks), self.s_block
-        starts = np.arange(b, dtype=np.int32) * sb
-        valid = (np.arange(b * sb) < self.n_s).reshape(b, sb)
-        return jnp.asarray(starts), jnp.asarray(valid)
+        ids = np.arange(b * sb, dtype=np.int32).reshape(b, sb)
+        valid = np.arange(b * sb) < self.n_s
+        valid[: self.n_s] &= self._alive
+        return jnp.asarray(ids), jnp.asarray(valid.reshape(b, sb))
+
+    def _refresh_valid(self):
+        """Push the current alive mask into every cached stack's valid mask —
+        the whole device-side cost of delete()/expire(); index structures,
+        id stacks and mass stacks are untouched."""
+        if not self._cache_device:
+            return
+        _, valid = self._stack_ids_valid()
+        if self._bf_stack is not None:
+            self._bf_stack.valid = valid
+        if self._iib_stack is not None:
+            self._iib_stack.valid = valid
+        if self._kernel_stack is not None:
+            ks = self._kernel_stack
+            ns_pad = ks.col_ids.shape[1]
+            alive = np.zeros(ns_pad, bool)
+            alive[: self.n_s] = self._alive
+            ks.col_valid = jnp.asarray(alive[None, :].astype(np.int32))
 
     def _stack_bf(self, from_block: int) -> _BFStack:
         """Stack the padded-CSR blocks: (B, s_block, F) device arrays.
@@ -551,12 +781,12 @@ class SparseKNNIndex:
         parts_i.append(jnp.asarray(idx.reshape(-1, sb, f)))
         parts_v.append(jnp.asarray(val.reshape(-1, sb, f)))
         parts_n.append(jnp.asarray(nnz.reshape(-1, sb)))
-        starts, valid = self._stack_starts_valid()
+        ids, valid = self._stack_ids_valid()
         return _BFStack(
             idx=jnp.concatenate(parts_i, axis=0),
             val=jnp.concatenate(parts_v, axis=0),
             nnz=jnp.concatenate(parts_n, axis=0),
-            starts=starts, valid=valid,
+            ids=ids, valid=valid,
         )
 
     def _stack_iib(self, from_block: int, rank: Optional[jax.Array] = None) -> _IIBStack:
@@ -598,12 +828,12 @@ class SparseKNNIndex:
             parts_r.append(ti.rows[None])
             parts_v.append(ti.vals[None])
             parts_c.append(ti.counts[None])
-        starts, valid = self._stack_starts_valid()
+        ids, valid = self._stack_ids_valid()
         return _IIBStack(
             rows=jnp.concatenate(parts_r, axis=0),
             vals=jnp.concatenate(parts_v, axis=0),
             counts=jnp.concatenate(parts_c, axis=0),
-            starts=starts, valid=valid, max_rows=m,
+            ids=ids, valid=valid, max_rows=m,
         )
 
     def _stack_mass(self, from_block: int) -> jax.Array:
@@ -647,8 +877,12 @@ class SparseKNNIndex:
             s_occ = np.concatenate([old.s_occ[:keep], tail_occ])
         else:
             s_tiles, s_occ = tail_tiles, tail_occ
-        col_valid = (np.arange(ns_pad) < self.n_s).astype(np.int32)
-        col_ids = np.where(col_valid > 0, np.arange(ns_pad, dtype=np.int32), -1)
+        col_valid = np.zeros(ns_pad, bool)
+        col_valid[: self.n_s] = self._alive
+        col_ids = np.where(
+            np.arange(ns_pad) < self.n_s, np.arange(ns_pad, dtype=np.int32), -1
+        )
+        col_valid = col_valid.astype(np.int32)
         return _KernelStack(
             s_tiles=s_tiles,
             s_occ=s_occ,
@@ -696,7 +930,7 @@ class SparseKNNIndex:
             self.spec, algorithm=self.algorithm, s_block=self.s_block
         )
         return plan((n_r, f_r, self.dim), (self.n_s, self._f_mean, self.dim), spec,
-                    occupied_tiles=self.occupied_tiles)
+                    occupied_tiles=self.occupied_tiles, calibration=self.calibration)
 
     # -- query --------------------------------------------------------------
 
@@ -722,7 +956,6 @@ class SparseKNNIndex:
         rb = min(spec.r_block or self.plan_for(R).r_block, n_r)
         sb = self.s_block
         tile = self.tile
-        t_total = num_tiles(self.dim, tile)
         cached = self._cache_device
 
         sampled_ids = None
@@ -731,7 +964,9 @@ class SparseKNNIndex:
         if spec.warm_start > 0 and algorithm == "iiib":
             m = max(int(n_s * spec.warm_start), k)
             rng = np.random.default_rng(spec.seed)
-            sampled_ids = np.sort(rng.choice(n_s, size=min(m, n_s), replace=False))
+            # sample live rows only — a tombstoned row must never be offered
+            (pool,) = np.nonzero(self._alive)
+            sampled_ids = np.sort(rng.choice(pool, size=min(m, pool.size), replace=False))
             sampled_mask = np.zeros(n_s, bool)
             sampled_mask[sampled_ids] = True
             sample_block = SparseBatch(
@@ -767,20 +1002,25 @@ class SparseKNNIndex:
                     # active lists from row occupancy
                     state = self._query_fused_kernel(state, br, stats, rb, n_valid)
                 else:
-                    # R-side active tiles (host, concrete) — true tile skipping
-                    occ_any = _host_tile_any(br, tile, t_total)
-                    tiles = jnp.asarray(active_tile_list(occ_any))
+                    # R-side prep (active tiles are host-concrete — true
+                    # tile skipping); shared with the sharded store
+                    prep = prepare_r_block_inputs(
+                        br, "iib", tile, with_r_tiles=not spec.use_kernel
+                    )
                     if cached:
-                        r_tiles = dense_r_tiles(br, None, tile)
-                        state = self._query_iib_scanned(state, r_tiles, tiles, stats)
+                        state = self._query_iib_scanned(
+                            state, prep["r_tiles"], prep["tiles"], stats
+                        )
                     else:
-                        r_tiles = None if spec.use_kernel else dense_r_tiles(br, None, tile)
-                        state = self._query_pairs(state, br, r_tiles, tiles, stats, rb)
+                        state = self._query_pairs(
+                            state, br, prep.get("r_tiles"), prep["tiles"],
+                            stats, rb,
+                        )
             else:  # iiib — masked superset refinement, threshold in carry
-                r_tiles = dense_r_tiles(br, self._rank_dev, tile)
-                mwt = iiib_mod.maxw_tiles(br, self._rank_dev, tile)
-                occ_any = _host_tile_any(br, tile, t_total, self._rank_np)
-                tiles = jnp.asarray(active_tile_list(occ_any))
+                prep = prepare_r_block_inputs(
+                    br, "iiib", tile, rank_np=self._rank_np, rank_dev=self._rank_dev
+                )
+                r_tiles, mwt, tiles = prep["r_tiles"], prep["mwt"], prep["tiles"]
                 rv = jnp.asarray(r_valid)
                 if cached:
                     state, aux = self._query_iiib_scanned(
@@ -814,7 +1054,7 @@ class SparseKNNIndex:
         st = self._bf_stack
         b = len(self._blocks)
         state = bf_scan_join(
-            state, br, st.idx, st.val, st.nnz, st.starts, st.valid, dim=self.dim
+            state, br, st.idx, st.val, st.nnz, st.ids, st.valid, dim=self.dim
         )
         stats.device_dispatches += 1
         stats.blocks += b
@@ -825,7 +1065,7 @@ class SparseKNNIndex:
         st = self._iib_stack
         b = len(self._blocks)
         state = iib_scan_join(
-            state, r_tiles, tiles, st.rows, st.vals, st.counts, st.starts, st.valid,
+            state, r_tiles, tiles, st.rows, st.vals, st.counts, st.ids, st.valid,
             tile=self.tile, num_s=self.s_block,
         )
         stats.device_dispatches += 1
@@ -835,14 +1075,24 @@ class SparseKNNIndex:
         return state
 
     def _sampled_valid(self, sampled_mask: Optional[np.ndarray]) -> np.ndarray:
-        """(B, s_block) bool — padding AND warm-start-sampled rows masked out
-        (sampled rows were already offered by the warm-start pass).  The one
-        home of this mask: the scan stacks it, the streaming loop slices it."""
+        """(B, s_block) bool — padding, tombstoned AND warm-start-sampled rows
+        masked out (sampled rows were already offered by the warm-start
+        pass).  The one home of this mask: the scan stacks it, the
+        streaming loop slices it."""
         b, sb = len(self._blocks), self.s_block
         valid = np.arange(b * sb) < self.n_s
+        valid[: self.n_s] &= self._alive
         if sampled_mask is not None:
             valid[: self.n_s] &= ~sampled_mask
         return valid.reshape(b, sb)
+
+    def _block_valid(self, blk: _SBlock) -> np.ndarray:
+        """(s_block,) bool — one block's padding mask with tombstones folded
+        in (the streaming loops' per-pair counterpart of the stack valid)."""
+        v = blk.valid.copy()
+        hi = min(blk.start + self.s_block, self.n_s)
+        v[: hi - blk.start] &= self._alive[blk.start:hi]
+        return v
 
     def _query_iiib_scanned(self, state, r_tiles, mwt, tiles, stats, sampled_mask, rv):
         """IIIB's whole S side as ONE dispatch: the superset-index scan with
@@ -855,7 +1105,7 @@ class SparseKNNIndex:
         thr0 = min_prune_score(state, valid=rv)   # device scalar — warm start included
         state, _, thr_trace, kept = iiib_scan_join(
             state, thr0, r_tiles, mwt, tiles,
-            st.rows, st.vals, st.counts, self._mass_stack, st.starts,
+            st.rows, st.vals, st.counts, self._mass_stack, st.ids,
             jnp.asarray(self._sampled_valid(sampled_mask)), rv,
             tile=self.tile, num_s=self.s_block,
         )
@@ -909,7 +1159,8 @@ class SparseKNNIndex:
         for blk in self._blocks:
             s0 = blk.start
             bs = _device_batch(blk.host)      # transient, per pair
-            s_valid = jnp.asarray(blk.valid)
+            bv = self._block_valid(blk)
+            s_valid = jnp.asarray(bv)
             s_off = jnp.int32(s0)
             stats.blocks += 1
 
@@ -924,7 +1175,7 @@ class SparseKNNIndex:
                 from repro.kernels.knn_topk.ops import knn_topk as _fused
 
                 state = _fused(
-                    br, bs, state=state, s_offset=s0, s_valid=blk.valid,
+                    br, bs, state=state, s_offset=s0, s_valid=bv,
                     tile=tile, block_r=min(256, rb), block_s=min(256, sb),
                     interpret=_interpret_kernels(),
                 )
@@ -991,17 +1242,64 @@ def distributed_join(
     n_r_valid: Optional[int] = None,
     n_s_valid: Optional[int] = None,
 ) -> TopKState:
-    """Mesh-distributed query: the engine face of the shard_map ring join.
+    """Mesh-distributed query: the engine face of the multi-device join.
 
-    Index construction is device-local inside the ring (each step presents
-    a new S shard), so there is no host-side cached index to reuse; the
-    engine contributes the resolved JoinSpec.
+    Rebased onto :class:`repro.store.ShardedKNNStore`: S is partitioned
+    over ``ring_axes`` into per-shard device-resident index stacks (built
+    once) and every R block is one fan-out dispatch with an on-device
+    top-k reduction — O(R-blocks) dispatches instead of the legacy ring's
+    rotate-and-rebuild.  The legacy ``lax.ppermute`` ring driver
+    (core/ring.py) remains for ``dim_axis`` (dimension-sharded tensor
+    parallelism), which the store does not cover yet, and for traced
+    inputs: the store's build phase is host-driven (concrete block
+    padding and index assembly), so under ``jax.jit`` tracing — the
+    dry-run compiling the whole join as one program — the fully
+    traceable ring runs instead.
     """
-    from repro.core.ring import _ring_join_impl
+    import math
 
-    return _ring_join_impl(
-        R, S, spec.k, mesh,
-        algorithm=spec.algorithm or "iiib",
-        ring_axes=ring_axes, dim_axis=dim_axis, tile=spec.tile,
-        n_r_valid=n_r_valid, n_s_valid=n_s_valid,
+    n_r, n_s = R.num_vectors, S.num_vectors
+    n_r_valid = n_r if n_r_valid is None else n_r_valid
+    n_s_valid = n_s if n_s_valid is None else n_s_valid
+    traced = isinstance(R.indices, jax.core.Tracer) or isinstance(
+        S.indices, jax.core.Tracer
+    )
+    n_ring = math.prod(mesh.shape[a] for a in ring_axes)
+    if dim_axis is not None or traced or n_s_valid < n_ring:
+        # the store needs concrete data (host-driven build) and >= 1 row
+        # per shard; the ppermute ring covers tracing (the dry-run),
+        # dimension sharding, and degenerate tiny-S cases
+        from repro.core.ring import _ring_join_impl
+
+        return _ring_join_impl(
+            R, S, spec.k, mesh,
+            algorithm=spec.algorithm or "iiib",
+            ring_axes=ring_axes, dim_axis=dim_axis, tile=spec.tile,
+            n_r_valid=n_r_valid, n_s_valid=n_s_valid,
+        )
+    from repro.store import ShardedKNNStore
+    # the ring API let callers pad R/S to the ring size; the store needs
+    # neither the padding nor the divisibility, so strip it
+    S_use = SparseBatch(
+        indices=S.indices[:n_s_valid], values=S.values[:n_s_valid],
+        nnz=S.nnz[:n_s_valid], dim=S.dim,
+    )
+    R_use = SparseBatch(
+        indices=R.indices[:n_r_valid], values=R.values[:n_r_valid],
+        nnz=R.nnz[:n_r_valid], dim=R.dim,
+    )
+    store = ShardedKNNStore(
+        S_use, dataclasses.replace(spec, algorithm=spec.algorithm or "iiib"),
+        mesh=mesh, axes=tuple(ring_axes),
+    )
+    res = store.query(R_use)
+    if n_r_valid == n_r:
+        return res.state
+    pad = n_r - n_r_valid
+    k = res.scores.shape[1]
+    return TopKState(
+        scores=jnp.concatenate(
+            [res.scores, jnp.full((pad, k), -jnp.inf, jnp.float32)]
+        ),
+        ids=jnp.concatenate([res.ids, jnp.full((pad, k), -1, jnp.int32)]),
     )

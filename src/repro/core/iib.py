@@ -17,6 +17,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.bf import block_ids
 from repro.core.index import TileIndex, tile_scores
 from repro.core.topk import TopKState, topk_update
 
@@ -27,11 +28,11 @@ def iib_join_block(
     r_tiles: jax.Array,        # (T, |Br|, tile) — dense R tiles (identity perm for IIB)
     index: TileIndex,
     active_tiles: jax.Array,   # (A,) int32, sentinel-padded
-    s_offset: jax.Array,       # scalar int32 — global id of the block's first S row
-    s_valid: jax.Array,        # (|Bs|,) bool — masks padding rows of partial blocks
+    s_offset: jax.Array,       # scalar first-row id or (|Bs|,) per-row global ids
+    s_valid: jax.Array,        # (|Bs|,) bool — masks padding + tombstoned rows
 ) -> TopKState:
     scores = tile_scores(r_tiles, index, active_tiles)
-    ids = s_offset + jnp.arange(index.num_s, dtype=jnp.int32)
+    ids = block_ids(s_offset, index.num_s)
     valid = (scores > 0.0) & s_valid[None, :]
     scores = jnp.where(valid, scores, -jnp.inf)
     return topk_update(state, scores, ids)
@@ -45,7 +46,7 @@ def iib_scan_join(
     s_rows: jax.Array,         # (B, T+1, M) int32 — stacked per-block tile lists
     s_vals: jax.Array,         # (B, T+1, M, tile) f32
     s_counts: jax.Array,       # (B, T+1) int32
-    s_starts: jax.Array,       # (B,) int32
+    s_ids: jax.Array,          # (B, num_s) int32 — per-row global ids
     s_valid: jax.Array,        # (B, num_s) bool
     tile: int,
     num_s: int,
@@ -61,12 +62,12 @@ def iib_scan_join(
     crossing = jnp.zeros((num_s,), jnp.int32)
 
     def body(st, xs):
-        rows, vals, counts, off, vm = xs
+        rows, vals, counts, ids, vm = xs
         index = TileIndex(
             rows=rows, vals=vals, counts=counts, pref_ub=pref_ub,
             crossing=crossing, tile=tile, num_s=num_s,
         )
-        return iib_join_block(st, r_tiles, index, active_tiles, off, vm), None
+        return iib_join_block(st, r_tiles, index, active_tiles, ids, vm), None
 
-    state, _ = jax.lax.scan(body, state, (s_rows, s_vals, s_counts, s_starts, s_valid))
+    state, _ = jax.lax.scan(body, state, (s_rows, s_vals, s_counts, s_ids, s_valid))
     return state

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.bf import block_ids
 from repro.core.index import TileIndex, dense_r_tiles, masked_tile_scores, tile_scores
 from repro.core.topk import (
     NEG_INF,
@@ -134,8 +135,8 @@ def _masked_block(
     tilemass: jax.Array,       # (|Bs|, T) per-row per-tile value mass
     maxw_tile: jax.Array,      # (T,) per-tile maxWeight(B_r)
     active_tiles: jax.Array,   # (A,) int32, sentinel-padded
-    s_offset: jax.Array,
-    s_valid: jax.Array,        # (|Bs|,) bool — padding AND warm-start-sampled rows
+    s_offset: jax.Array,       # scalar first-row id or (|Bs|,) per-row global ids
+    s_valid: jax.Array,        # (|Bs|,) bool — padding, tombstoned AND sampled rows
     r_valid: jax.Array,        # (|Br|,) bool — masks padded R rows out of the min
 ) -> Tuple[TopKState, jax.Array, jax.Array]:
     """One (B_r, B_s) IIIB step against the superset index; returns
@@ -160,7 +161,7 @@ def _masked_block(
         & s_valid[None, :]
     )
     scores = jnp.where(offer, a_full, NEG_INF)
-    ids = s_offset + jnp.arange(index.num_s, dtype=jnp.int32)
+    ids = block_ids(s_offset, index.num_s)
     state = topk_update(state, scores, ids)
     kept_entries = jnp.sum(((tilemass > 0.0) & keep).astype(jnp.int32))
     return state, min_prune_score(state, valid=r_valid), kept_entries
@@ -180,7 +181,7 @@ def iiib_scan_join(
     s_vals: jax.Array,         # (B, T+1, M, tile) f32
     s_counts: jax.Array,       # (B, T+1) int32
     s_mass: jax.Array,         # (B, num_s, T) f32 — stacked tilemass
-    s_starts: jax.Array,       # (B,) int32
+    s_ids: jax.Array,          # (B, num_s) int32 — per-row global ids
     s_valid: jax.Array,        # (B, num_s) bool
     r_valid: jax.Array,        # (|Br|,) bool
     tile: int,
@@ -199,19 +200,19 @@ def iiib_scan_join(
 
     def body(carry, xs):
         st, th = carry
-        rows, vals, counts, mass, off, vm = xs
+        rows, vals, counts, mass, ids, vm = xs
         index = TileIndex(
             rows=rows, vals=vals, counts=counts, pref_ub=pref_ub,
             crossing=crossing, tile=tile, num_s=num_s,
         )
         st, th, kept = _masked_block(
-            st, th, r_tiles, index, mass, maxw_tile, active_tiles, off, vm,
+            st, th, r_tiles, index, mass, maxw_tile, active_tiles, ids, vm,
             r_valid,
         )
         return (st, th), (th, kept)
 
     (state, thr), (thr_trace, kept_trace) = jax.lax.scan(
-        body, (state, thr), (s_rows, s_vals, s_counts, s_mass, s_starts, s_valid)
+        body, (state, thr), (s_rows, s_vals, s_counts, s_mass, s_ids, s_valid)
     )
     return state, thr, thr_trace, kept_trace
 

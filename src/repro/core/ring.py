@@ -1,6 +1,15 @@
 """Distributed KNN join — the paper's block nested-loop join on a TPU mesh.
 
-Mapping (DESIGN.md §2):
+``ring_knn_join`` is now a compat wrapper over the sharded datastore
+(repro.store.ShardedKNNStore via ``engine.distributed_join``): S is
+partitioned into build-once per-shard index stacks and each R block is one
+fan-out dispatch with an on-device top-k reduction.  The ``lax.ppermute``
+ring driver below (``_ring_join_impl``) remains the implementation for
+``dim_axis`` — dimension-sharded tensor parallelism, where each model
+shard scores its own dim range and partial scores psum before the merge —
+which the store does not cover.
+
+Legacy ring mapping (DESIGN.md §2):
 
 * Each ring position (the flattened ``ring_axes`` of the mesh, e.g.
   ``("pod", "data")``) holds a resident **R shard** (the paper's in-buffer
@@ -66,13 +75,14 @@ def ring_knn_join(
     n_r_valid: Optional[int] = None,
     n_s_valid: Optional[int] = None,
 ) -> TopKState:
-    """R ⋈_KNN S over a device mesh. R/S row counts must divide the ring size.
+    """R ⋈_KNN S over a device mesh.
 
     Compat wrapper over the engine (core/engine.py): builds a JoinSpec and
-    dispatches to :func:`repro.core.engine.distributed_join`, which calls the
-    shard_map driver below.  Returns a TopKState for all R rows (sharded
-    over ``ring_axes``), with global S ids.  ``n_*_valid`` mask padding rows
-    appended by the caller.
+    dispatches to :func:`repro.core.engine.distributed_join` — the sharded
+    store by default, the ring driver below when ``dim_axis`` is set (only
+    that path still requires R/S row counts to divide the ring size).
+    Returns a TopKState for all R rows with global S ids; ``n_*_valid``
+    mask padding rows appended by the caller.
     """
     from repro.core.engine import JoinSpec, distributed_join
 

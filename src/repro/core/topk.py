@@ -71,6 +71,47 @@ def pad_topk_state(state: TopKState, n_pad: int) -> TopKState:
     return TopKState(scores=scores, ids=ids)
 
 
+def merge_topk_states(a: TopKState, b: TopKState) -> TopKState:
+    """Merge two per-row top-k states; ties favour ``a`` (the lower shard).
+
+    The merge body is the shared insertion epilogue of kernels/topk_merge
+    (also the per-S-block epilogue of the fused knn_topk kernel), so the
+    sharded store's reduction tree and the kernels resolve ties identically
+    to ``topk_update`` — equal scores keep the earliest-offered entry,
+    which is what makes a fan-out/reduce over row-range shards bit-identical
+    to the sequential S-block scan.
+    """
+    from repro.kernels.topk_merge.kernel import insert_candidates
+
+    scores, ids = insert_candidates(a.scores, a.ids, b.scores, b.ids)
+    return TopKState(scores=scores, ids=ids)
+
+
+def tree_reduce_topk(state: TopKState, axis_name, num_shards: int) -> TopKState:
+    """All-reduce per-shard TopKStates over a mesh axis into the global top-k.
+
+    Communication is one ``all_gather`` of the (N, k) states; the merge is a
+    log-depth binary tree of :func:`merge_topk_states` in shard order (shard
+    i's rows precede shard i+1's in the conceptual concatenated S, so the
+    lower shard always sits on the tie-winning side).  Every shard computes
+    the identical reduction, so the result is replicated — callable only
+    inside ``shard_map``/``pmap`` tracing over ``axis_name``.
+    """
+    all_scores = jax.lax.all_gather(state.scores, axis_name)  # (shards, N, k)
+    all_ids = jax.lax.all_gather(state.ids, axis_name)
+    states = [
+        TopKState(scores=all_scores[i], ids=all_ids[i]) for i in range(num_shards)
+    ]
+    while len(states) > 1:
+        nxt = [
+            merge_topk_states(states[i], states[i + 1])
+            if i + 1 < len(states) else states[i]
+            for i in range(0, len(states), 2)
+        ]
+        states = nxt
+    return states[0]
+
+
 def prune_scores(state: TopKState) -> jax.Array:
     """(N,) — pruneScore(r): the k-th best score so far (−inf if < k seen)."""
     return state.scores[:, -1]

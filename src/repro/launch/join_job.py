@@ -1,14 +1,16 @@
 """Distributed KNN-join job launcher (the paper's workload as a service).
 
 Runs R ⋈_KNN S with the requested algorithm either single-process
-(build-once/query-many engine, core/engine.py) or ring-distributed over
-the local device mesh (core/ring.py).  In host mode the S-side index is
-built once and ``--repeat N`` replays the query against it — the serving
-shape — reporting per-query wall times and the ``index_builds`` counter
-(equal to the number of S blocks, not queries x S blocks).  The 512-chip
-configuration of the same ring join is exercised by the dry-run
-(`--dryrun`), which lowers and compiles the shard_map program on the
-production mesh.
+(build-once/query-many engine, core/engine.py) or sharded over the local
+device mesh (``--ring``, now backed by repro.store.ShardedKNNStore: one
+build-once index stack per shard, fan-out queries with an on-device top-k
+reduction).  In both modes the S side is built once and ``--repeat N``
+replays the query against it — the serving shape — reporting per-query
+wall times plus the ``index_builds`` / ``device_dispatches`` counters
+(builds stay at the number of S blocks, dispatches at the number of R
+blocks, regardless of queries x shards).  The 512-chip configuration of
+the legacy ring join is exercised by the dry-run (`--dryrun`), which
+lowers and compiles the shard_map program on the production mesh.
 
   PYTHONPATH=src python -m repro.launch.join_job --nr 2000 --ns 4000 \
       --dim 10000 --k 5 --algorithm iiib --ring --data-par 4
@@ -41,19 +43,17 @@ def run_host(cfg: JoinConfig, R, S, stats=None):
     return build_index(cfg, S).query(R, stats=stats).state
 
 
-def run_ring(cfg: JoinConfig, R, S, data_par: int, model_par: int = 1):
-    import jax
+def build_store(cfg: JoinConfig, S, num_shards: int):
+    """Build the sharded datastore once (one device-resident index stack
+    per shard; the serving shape's multi-device build phase)."""
+    from repro.core.engine import JoinSpec
+    from repro.store import ShardedKNNStore
 
-    from repro.core.ring import pad_to_ring, ring_knn_join
-    from repro.launch.mesh import make_host_mesh
-
-    mesh = make_host_mesh(data_par, model_par)
-    Rp, nr = pad_to_ring(R, data_par)
-    Sp, ns = pad_to_ring(S, data_par)
-    return ring_knn_join(
-        Rp, Sp, cfg.k, mesh, algorithm=cfg.algorithm,
-        ring_axes=("data",), n_r_valid=nr, n_s_valid=ns, tile=cfg.tile,
+    spec = JoinSpec(
+        k=cfg.k, algorithm=cfg.algorithm,
+        r_block=cfg.r_block, s_block=cfg.s_block, tile=cfg.tile,
     )
+    return ShardedKNNStore.build(S, spec, num_shards=num_shards)
 
 
 def dryrun_ring(cfg: JoinConfig, multi_pod: bool = False):
@@ -126,9 +126,26 @@ def main(argv=None):
         "algorithm": args.algorithm, "nr": args.nr, "ns": args.ns, "k": args.k,
     }
     if args.ring:
-        state = run_ring(cfg, R, S, args.data_par)
-        state.scores.block_until_ready()
-        summary["wall_s"] = round(time.time() - t0, 3)
+        # sharded store: build once over the local devices, replay queries
+        store = build_store(cfg, S, args.data_par)
+        query_s = []
+        for _ in range(max(args.repeat, 1)):
+            tq = time.time()
+            res = store.query(R)
+            res.scores.block_until_ready()
+            query_s.append(round(time.time() - tq, 3))
+        state = res.state
+        summary.update({
+            "wall_s": round(time.time() - t0, 3),
+            "build_s": round(store.stats.build_wall_s, 3),
+            "query_s": query_s,
+            "shards": store.n_shards,
+            "shard_rows": store.shard_rows,
+            "s_blocks": store.num_blocks,
+            "index_builds": store.stats.index_builds,
+            "device_dispatches": store.stats.device_dispatches,
+            "host_syncs": store.stats.host_syncs,
+        })
     else:
         index = build_index(cfg, S)
         query_s = []

@@ -29,6 +29,17 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return compat.make_mesh((data, model), ("data", "model"))
 
 
+def make_store_mesh(num_shards: int | None = None):
+    """1-D ``('shard',)`` mesh for the sharded KNN datastore
+    (repro.store.ShardedKNNStore): one store shard per device.  Defaults to
+    every local device; pass ``num_shards`` to use a subset (e.g. a
+    single-shard store on a one-device host)."""
+    n = len(jax.devices())
+    shards = n if num_shards is None else num_shards
+    assert 1 <= shards <= n, f"need {shards} devices, have {n}"
+    return compat.make_mesh((shards,), ("shard",))
+
+
 def dp_axes(mesh) -> tuple:
     """Data-parallel axes: ('pod','data') on multi-pod, ('data',) otherwise."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -161,6 +161,27 @@ def opt_shardings(abstract_opt_state, param_shards, mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
+# KNN store stacks (repro.store)
+# ---------------------------------------------------------------------------
+
+def store_stack_specs(tree, axes) -> Any:
+    """Pytree of PartitionSpecs sharding every leaf's LEADING axis over the
+    store's shard axes (the rest replicated) — the layout of the sharded
+    KNN datastore's per-shard index stacks: leaf shapes are
+    ``(num_shards, blocks, ...)``, one shard slice per device."""
+    axes = tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
+    return jax.tree.map(lambda leaf: P(axes, *([None] * (leaf.ndim - 1))), tree)
+
+
+def store_put(tree, mesh: Mesh, axes):
+    """Place a store stack pytree on the mesh, leading axis sharded."""
+    from repro import compat
+
+    specs = store_stack_specs(tree, axes)
+    return jax.tree.map(lambda x, s: compat.shard_put(x, mesh, s), tree, specs)
+
+
+# ---------------------------------------------------------------------------
 # batch / cache specs
 # ---------------------------------------------------------------------------
 

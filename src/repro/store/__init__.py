@@ -1,0 +1,13 @@
+"""Sharded mutable KNN datastore — the first multi-device serving layer.
+
+  ShardedKNNStore — S partitioned row-wise over a mesh axis, one
+                    device-resident SparseKNNIndex stack set per shard
+                    (built once, reused across queries); ``query(R)``
+                    fans each R block out to every shard and tree-reduces
+                    the per-shard top-k states on device.
+  StoreStats      — store-lifetime work accounting (dispatches, syncs,
+                    index builds, tombstone/compaction counters).
+"""
+from repro.store.sharded import ShardedKNNStore, StoreStats
+
+__all__ = ["ShardedKNNStore", "StoreStats"]

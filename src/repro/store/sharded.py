@@ -1,0 +1,720 @@
+"""ShardedKNNStore — build-once-per-shard indexes, fan-out query with
+on-device top-k reduction, delete/TTL tombstones (DESIGN.md §Sharded store).
+
+The paper's algorithms are single-machine; serving one big S to heavy
+query traffic needs the standard distributed kNN-join decomposition
+(Lu et al., "Efficient Processing of k Nearest Neighbor Joins using
+MapReduce"): partition S row-wise, join every query block against every
+partition, merge per-partition top-k.  Here that becomes:
+
+* **Shard layout** — S is split into contiguous row ranges, one per
+  position of a mesh axis (``launch/mesh.make_store_mesh`` or any axis of
+  an existing mesh).  Each shard builds its own device-resident
+  :class:`~repro.core.engine.SparseKNNIndex` structures ONCE — the padded
+  CSR blocks (BF), tile-inverted indexes (IIB) or threshold-independent
+  superset indexes + tilemass (IIIB, in the GLOBAL datastore's
+  dim-frequency-rank order so every shard prunes like the single-device
+  build over the concatenated S).  The per-shard stacks are assembled
+  into ``(num_shards, blocks, ...)`` arrays placed with the leading axis
+  sharded (``launch/sharding.store_stack_specs``) — shard i's stacks
+  live on device i.
+
+* **Fan-out query** — ``query(R)`` prepares each R block's device inputs
+  once (``engine.prepare_r_block_inputs``; they depend only on R and on
+  build-frozen global statistics) and replicates them into ONE jitted
+  ``shard_map`` program: every shard runs the engine's scanned join over
+  its local blocks (the same ``bf_scan_join``/``iib_scan_join``/
+  ``iiib_scan_join`` dispatched on a single device), then the per-shard
+  TopKStates are tree-reduced on device (``core.topk.tree_reduce_topk``,
+  whose merge body is the shared ``insert_candidates`` epilogue of
+  kernels/topk_merge).  One device dispatch and one host sync (the result
+  pull) per R block — NOT per (R block, shard) — and zero query-time
+  index builds.  Results are bit-identical to a single-device
+  SparseKNNIndex over the concatenated S: shards hold ascending global-id
+  ranges and the reduction always puts the lower shard on the
+  tie-winning side, matching ``topk_update``'s first-offered-wins order.
+
+* **Mutability** — ``add()`` appends a batch to the shard with the
+  fewest live rows (balance policy), assigning fresh global ids and
+  re-assembling only that shard's tail blocks; ``delete(ids)`` and TTL
+  expiry (``add(..., ttl=)`` + ``expire(now)``) tombstone rows by
+  per-row valid masks folded into the scan (one host→device mask upload,
+  NO index rebuild); ``compact()`` — triggered automatically once a
+  shard's dead fraction crosses ``auto_compact`` — is the real rebuild
+  that reclaims tombstoned rows.  Global ids remain stable across all
+  mutations (each shard carries an explicit id stack, which is why the
+  scan joins take per-row ids rather than block offsets).  Once ``add()``
+  has landed a batch on a non-tail shard, global ids are no longer
+  ascending in shard order, so versus a single-device index built in
+  append order the scores stay exact but ids may differ where scores tie
+  EXACTLY (tie preference follows shard order; BF's zero-overlap 0.0
+  scores are the common case — IIB/IIIB mask those to -inf).
+
+IIIB's MinPruneScore threshold evolves shard-locally (each shard's scan
+carries its own) — exactness is per-entry (Theorem 1 masks only entries
+that provably cannot enter any top-k), so shard-local thresholds change
+the work done, never the result.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.core import iiib as iiib_mod
+from repro.core.bf import bf_scan_join
+from repro.core.engine import (
+    JoinResult,
+    JoinSpec,
+    JoinStats,
+    SparseKNNIndex,
+    _build_index_iib,
+    _device_batch,
+    _pad_block,
+    _pad_feature_axis,
+    _shape_stats,
+    load_calibration,
+    plan,
+    prepare_r_block_inputs,
+)
+from repro.core.iib import iib_scan_join
+from repro.core.iiib import iiib_scan_join
+from repro.core.topk import TopKState, init_topk, tree_reduce_topk
+from repro.sparse.format import SparseBatch
+
+P = jax.sharding.PartitionSpec
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Store-lifetime work accounting (per-query numbers live in the
+    JoinStats each ``query()`` returns)."""
+
+    queries: int = 0
+    device_dispatches: int = 0   # jitted fan-out launches (one per R block)
+    host_syncs: int = 0          # result pulls (one per R block)
+    index_builds: int = 0        # per-shard S-block index constructions
+    stack_uploads: int = 0       # sharded stack (re)placements on the mesh
+    build_wall_s: float = 0.0
+    query_wall_s: float = 0.0
+    deleted: int = 0             # rows tombstoned via delete()
+    expired: int = 0             # rows tombstoned via TTL expiry
+    compactions: int = 0         # shard compactions (real rebuilds)
+
+
+def _np_sparse_slice(idx, val, nnz, lo: int, hi: int, dim: int) -> SparseBatch:
+    return SparseBatch(
+        indices=jnp.asarray(idx[lo:hi]), values=jnp.asarray(val[lo:hi]),
+        nnz=jnp.asarray(nnz[lo:hi]), dim=dim,
+    )
+
+
+class ShardedKNNStore:
+    """Build-once-per-shard, query-many, mutable KNN datastore over a mesh.
+
+    ``spec`` follows the engine's JoinSpec; open fields are resolved once,
+    globally, so every shard uses the same algorithm and block geometry.
+    ``axes`` names the mesh axis (or axes — they flatten into the shard
+    ring) that S is partitioned over; defaults to a fresh 1-D ``('shard',)``
+    mesh over the local devices.  ``use_kernel`` / ``warm_start`` are
+    engine-only for now (the fused Pallas path and the sampled warm start
+    assume a single resident device) and are rejected here.
+    """
+
+    def __init__(
+        self,
+        S: SparseBatch,
+        spec: JoinSpec,
+        mesh=None,
+        axes: Optional[Sequence[str]] = None,
+        num_shards: Optional[int] = None,
+        auto_compact: float = 0.5,
+        calibration=None,
+    ):
+        t0 = time.perf_counter()
+        if spec.use_kernel:
+            raise ValueError("use_kernel is not supported by ShardedKNNStore yet")
+        if spec.warm_start:
+            raise ValueError("warm_start is not supported by ShardedKNNStore yet")
+        if mesh is None:
+            from repro.launch.mesh import make_store_mesh
+
+            mesh = make_store_mesh(num_shards)
+        self.mesh = mesh
+        if axes is None:
+            axes = (mesh.axis_names[0],)
+        self._axes = tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
+        self.n_shards = int(np.prod([mesh.shape[a] for a in self._axes]))
+        self.spec = spec
+        self.dim = S.dim
+        self.tile = spec.tile
+        self.auto_compact = float(auto_compact)
+        self.calibration = load_calibration(calibration)
+        self.stats = StoreStats()
+
+        n_s = S.num_vectors
+        if n_s < self.n_shards:
+            raise ValueError(f"S has {n_s} rows < {self.n_shards} shards")
+
+        idx = np.asarray(S.indices)
+        val = np.asarray(S.values)
+        nnz = np.asarray(S.nnz)
+
+        # resolve algorithm/geometry ONCE at store level (bit-parity with a
+        # single-device build needs every shard on the same plan, including
+        # the occupied-tile statistic the engine's own planning uses)
+        f_mean = float(nnz.mean()) if n_s else 0.0
+        p = plan((n_s, f_mean, self.dim), (n_s, f_mean, self.dim), spec,
+                 occupied_tiles=self._occupied_tiles_of(idx),
+                 calibration=self.calibration)
+        self.algorithm = spec.algorithm or p.algorithm
+
+        # contiguous balanced row ranges (ragged allowed: first n_s % shards
+        # ranges get one extra row — np.array_split semantics)
+        sizes = [len(a) for a in np.array_split(np.arange(n_s), self.n_shards)]
+        bounds = np.concatenate([[0], np.cumsum(sizes)])
+        self.s_block = max(1, min(spec.s_block or p.s_block, min(sizes)))
+
+        # IIIB superset order: the GLOBAL datastore's dim-frequency rank,
+        # frozen into every shard (a shard-local rank would still be exact
+        # but would not match the single-device parity reference)
+        self._rank_np = None
+        self._rank_dev = None
+        if self.algorithm == "iiib":
+            freq = np.zeros(self.dim, np.int64)
+            ok = idx < self.dim
+            np.add.at(freq, np.where(ok, idx, 0).ravel(), ok.ravel())
+            self._rank_np = iiib_mod.s_frequency_rank(freq)
+            self._rank_dev = jnp.asarray(self._rank_np)
+
+        shard_spec = dataclasses.replace(
+            spec, algorithm=self.algorithm, s_block=self.s_block
+        )
+        # per-shard engine indexes in streaming mode: host mirrors, block
+        # metadata and tombstone bookkeeping — the DEVICE stacks are owned
+        # by the store (assembled sharded over the mesh below)
+        self.shards: List[SparseKNNIndex] = []
+        self._gids: List[np.ndarray] = []
+        for i in range(self.n_shards):
+            lo, hi = int(bounds[i]), int(bounds[i + 1])
+            self.shards.append(SparseKNNIndex.build(
+                _np_sparse_slice(idx, val, nnz, lo, hi, self.dim), shard_spec,
+                cache_device_blocks=False, frozen_rank=self._rank_np,
+                calibration=self.calibration,
+            ))
+            self._gids.append(np.arange(lo, hi, dtype=np.int32))
+        self._next_gid = n_s
+
+        self._shard_arrays: List[Dict[str, np.ndarray]] = [
+            self._assemble_shard(i) for i in range(self.n_shards)
+        ]
+        self._upload_stacks()
+        self._query_fns: Dict[int, callable] = {}
+        self.stats.build_wall_s += time.perf_counter() - t0
+
+    # -- introspection -------------------------------------------------------
+
+    @classmethod
+    def build(cls, S: SparseBatch, spec: JoinSpec, **kw) -> "ShardedKNNStore":
+        return cls(S, spec, **kw)
+
+    @property
+    def num_vectors(self) -> int:
+        """Live rows across all shards."""
+        return sum(s.live_rows for s in self.shards)
+
+    @property
+    def shard_rows(self) -> List[int]:
+        """Per-shard live row counts (the balance policy's target)."""
+        return [s.live_rows for s in self.shards]
+
+    @property
+    def num_blocks(self) -> int:
+        return sum(s.num_blocks for s in self.shards)
+
+    # -- stack assembly ------------------------------------------------------
+
+    def _assemble_shard(self, i: int, from_block: int = 0) -> Dict[str, np.ndarray]:
+        """One shard's stack slice as host arrays (block-stacked, not yet
+        padded to the cross-shard maxima).  Tile-index construction counts
+        into ``stats.index_builds`` — this is the per-shard analogue of the
+        engine's ``_build_stacks`` and runs only at build/add/compact/
+        refreeze time, never at query time.
+
+        ``from_block`` retains the previously assembled prefix (the engine's
+        tail-only rebuild semantics): ``add()`` passes the first block its
+        ``extend()`` touched, so N chunked adds cost O(tail) index builds
+        each, not O(shard).  A grown list bound pads the retained prefix
+        (sentinel rows, zero values) — a pad is not a rebuild."""
+        shard = self.shards[i]
+        old = self._shard_arrays[i] if from_block > 0 else None
+        out: Dict[str, np.ndarray] = {}
+        sb = self.s_block
+        if self.algorithm == "bf":
+            f = shard._idx.shape[1]
+            tail = shard._blocks[from_block:]
+            parts = {
+                "idx": [np.asarray(b.host.indices).astype(np.int32) for b in tail],
+                "val": [np.asarray(b.host.values).astype(np.float32) for b in tail],
+                "nnz": [np.asarray(b.host.nnz).astype(np.int32) for b in tail],
+            }
+            if old is not None:
+                oi, ov = old["idx"][:from_block], old["val"][:from_block]
+                if oi.shape[2] < f:
+                    oi2, ov2 = _pad_feature_axis(
+                        oi.reshape(-1, oi.shape[2]), ov.reshape(-1, ov.shape[2]),
+                        f, self.dim,
+                    )
+                    oi = oi2.reshape(from_block, sb, f)
+                    ov = ov2.reshape(from_block, sb, f)
+                parts["idx"] = list(oi) + parts["idx"]
+                parts["val"] = list(ov) + parts["val"]
+                parts["nnz"] = list(old["nnz"][:from_block]) + parts["nnz"]
+            out = {k: np.stack(v) for k, v in parts.items()}
+        else:
+            rank = shard._rank_dev if self.algorithm == "iiib" else None
+            tail = shard._blocks[from_block:]
+            m = max(blk.bound for blk in tail)
+            if old is not None:
+                m = max(m, old["rows"].shape[2])
+            rows, vals, counts, mass = [], [], [], []
+            if old is not None:
+                orows, ovals = old["rows"][:from_block], old["vals"][:from_block]
+                pad = m - orows.shape[2]
+                if pad:
+                    orows = np.concatenate(
+                        [orows, np.full(orows.shape[:2] + (pad,), sb, orows.dtype)],
+                        axis=2,
+                    )
+                    ovals = np.concatenate(
+                        [ovals,
+                         np.zeros(ovals.shape[:2] + (pad, self.tile), ovals.dtype)],
+                        axis=2,
+                    )
+                rows, vals = list(orows), list(ovals)
+                counts = list(old["counts"][:from_block])
+                if self.algorithm == "iiib":
+                    mass = list(old["mass"][:from_block])
+            for blk in tail:
+                ti = _build_index_iib(
+                    _device_batch(blk.host), max_rows=m, tile=self.tile, rank=rank
+                )
+                self.stats.index_builds += 1
+                blk.list_total = int(np.asarray(ti.counts).sum())
+                rows.append(np.asarray(ti.rows))
+                vals.append(np.asarray(ti.vals))
+                counts.append(np.asarray(ti.counts))
+                if self.algorithm == "iiib":
+                    mass.append(blk.tilemass.astype(np.float32))
+            out["rows"] = np.stack(rows)
+            out["vals"] = np.stack(vals)
+            out["counts"] = np.stack(counts)
+            if self.algorithm == "iiib":
+                out["mass"] = np.stack(mass)
+        return out
+
+    def _shard_ids_valid(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(B, s_block) global-id stack + valid mask of shard i (padding and
+        tombstones folded in — the only arrays delete()/expire() touch)."""
+        shard = self.shards[i]
+        b, sb = shard.num_blocks, self.s_block
+        ids = np.zeros(b * sb, np.int32)
+        ids[: shard.n_s] = self._gids[i]
+        valid = np.arange(b * sb) < shard.n_s
+        valid[: shard.n_s] &= shard._alive
+        return ids.reshape(b, sb), valid.reshape(b, sb)
+
+    def _upload_stacks(self):
+        """Pad the per-shard slices to common shapes, stack on a leading
+        shard axis, and place sharded over the mesh axes."""
+        from repro.launch.sharding import store_put
+
+        sb = self.s_block
+        b_max = max(s.num_blocks for s in self.shards)
+        arrays = self._shard_arrays
+        stacked: Dict[str, np.ndarray] = {}
+
+        def pad_blocks(a: np.ndarray, fill) -> np.ndarray:
+            pad = b_max - a.shape[0]
+            if pad == 0:
+                return a
+            return np.concatenate(
+                [a, np.full((pad,) + a.shape[1:], fill, a.dtype)]
+            )
+
+        if self.algorithm == "bf":
+            f_max = max(a["idx"].shape[2] for a in arrays)
+            parts = {"idx": [], "val": [], "nnz": []}
+            for a in arrays:
+                idx2, val2 = a["idx"], a["val"]
+                if idx2.shape[2] < f_max:
+                    flat_i = idx2.reshape(-1, idx2.shape[2])
+                    flat_v = val2.reshape(-1, val2.shape[2])
+                    flat_i, flat_v = _pad_feature_axis(flat_i, flat_v, f_max, self.dim)
+                    idx2 = flat_i.reshape(idx2.shape[0], sb, f_max)
+                    val2 = flat_v.reshape(val2.shape[0], sb, f_max)
+                parts["idx"].append(pad_blocks(idx2, self.dim))
+                parts["val"].append(pad_blocks(val2, 0.0))
+                parts["nnz"].append(pad_blocks(a["nnz"], 0))
+            stacked = {k: np.stack(v) for k, v in parts.items()}
+        else:
+            m_max = max(a["rows"].shape[2] for a in arrays)
+            parts = {"rows": [], "vals": [], "counts": []}
+            if self.algorithm == "iiib":
+                parts["mass"] = []
+            for a in arrays:
+                rows, vals = a["rows"], a["vals"]
+                pad = m_max - rows.shape[2]
+                if pad:
+                    # a wider list bound is a pad, not a rebuild (sentinel
+                    # rows scatter into the discard slot, zero values)
+                    rows = np.concatenate(
+                        [rows, np.full(rows.shape[:2] + (pad,), sb, rows.dtype)],
+                        axis=2,
+                    )
+                    vals = np.concatenate(
+                        [vals, np.zeros(vals.shape[:2] + (pad, self.tile), vals.dtype)],
+                        axis=2,
+                    )
+                parts["rows"].append(pad_blocks(rows, sb))
+                parts["vals"].append(pad_blocks(vals, 0.0))
+                parts["counts"].append(pad_blocks(a["counts"], 0))
+                if self.algorithm == "iiib":
+                    parts["mass"].append(pad_blocks(a["mass"], 0.0))
+            stacked = {k: np.stack(v) for k, v in parts.items()}
+
+        ids_parts, valid_parts = [], []
+        for i in range(self.n_shards):
+            ids, valid = self._shard_ids_valid(i)
+            ids_parts.append(pad_blocks(ids, 0))
+            valid_parts.append(pad_blocks(valid, False))
+        stacked["ids"] = np.stack(ids_parts)
+        stacked["valid"] = np.stack(valid_parts)
+
+        self._stacks = store_put(
+            {k: jnp.asarray(v) for k, v in stacked.items()}, self.mesh, self._axes
+        )
+        self._num_blocks_stacked = b_max
+        self.stats.stack_uploads += 1
+        self._refresh_plan_stats()
+        # compiled query fns survive uploads: the program depends on stack
+        # geometry only through argument shapes, which jax.jit keys on
+
+    def _refresh_valid(self):
+        """Tombstone fold: ONLY the valid mask re-uploads — no index arrays
+        are touched, no tile index is rebuilt (``stats.index_builds`` is the
+        observable)."""
+        from repro.launch.sharding import store_put
+
+        b_max = self._num_blocks_stacked
+        valid_parts = []
+        for i in range(self.n_shards):
+            _, valid = self._shard_ids_valid(i)
+            pad = b_max - valid.shape[0]
+            if pad:
+                valid = np.concatenate([valid, np.zeros((pad, self.s_block), bool)])
+            valid_parts.append(valid)
+        new_valid = store_put(
+            jnp.asarray(np.stack(valid_parts)), self.mesh, self._axes
+        )
+        self._stacks = dict(self._stacks, valid=new_valid)
+
+    # -- fan-out query -------------------------------------------------------
+
+    def _query_fn(self, rb: int):
+        """The jitted shard_map program of one R block (cached per R-block
+        size): shard-local scanned join → on-device tree reduction."""
+        if rb in self._query_fns:
+            return self._query_fns[rb]
+        mesh, axes, nsh = self.mesh, self._axes, self.n_shards
+        k, dim, sb, tile = self.spec.k, self.dim, self.s_block, self.tile
+        alg = self.algorithm
+        rep = P()
+        shard = P(axes)
+        state_spec = TopKState(scores=rep, ids=rep)
+
+        if alg == "bf":
+            def local(bi, bv, bn, s_idx, s_val, s_nnz, s_ids, s_valid):
+                br = SparseBatch(indices=bi, values=bv, nnz=bn, dim=dim)
+                state = init_topk(rb, k)
+                state = bf_scan_join(
+                    state, br, s_idx[0], s_val[0], s_nnz[0], s_ids[0], s_valid[0],
+                    dim=dim,
+                )
+                return tree_reduce_topk(state, axes, nsh)
+
+            fn = compat.shard_map(
+                local, mesh,
+                in_specs=(rep, rep, rep) + (shard,) * 5,
+                out_specs=state_spec,
+            )
+        elif alg == "iib":
+            def local(r_tiles, tiles, s_rows, s_vals, s_counts, s_ids, s_valid):
+                state = init_topk(rb, k)
+                state = iib_scan_join(
+                    state, r_tiles, tiles,
+                    s_rows[0], s_vals[0], s_counts[0], s_ids[0], s_valid[0],
+                    tile=tile, num_s=sb,
+                )
+                return tree_reduce_topk(state, axes, nsh)
+
+            fn = compat.shard_map(
+                local, mesh,
+                in_specs=(rep, rep) + (shard,) * 5,
+                out_specs=state_spec,
+            )
+        else:
+            def local(r_tiles, mwt, tiles, rv,
+                      s_rows, s_vals, s_counts, s_mass, s_ids, s_valid):
+                state = init_topk(rb, k)
+                # each shard carries its OWN MinPruneScore — work-only
+                # divergence from the sequential scan (see module docstring)
+                state, thr, _, kept = iiib_scan_join(
+                    state, jnp.float32(-jnp.inf), r_tiles, mwt, tiles,
+                    s_rows[0], s_vals[0], s_counts[0], s_mass[0], s_ids[0],
+                    s_valid[0], rv, tile=tile, num_s=sb,
+                )
+                red = tree_reduce_topk(state, axes, nsh)
+                return (
+                    red,
+                    jax.lax.all_gather(jnp.sum(kept), axes),
+                    jax.lax.all_gather(thr, axes),
+                )
+
+            fn = compat.shard_map(
+                local, mesh,
+                in_specs=(rep, rep, rep, rep) + (shard,) * 6,
+                out_specs=(state_spec, rep, rep),
+            )
+        self._query_fns[rb] = jax.jit(fn)
+        return self._query_fns[rb]
+
+    def _occupied_tiles_of(self, idx: np.ndarray) -> int:
+        """Dim-tiles the given rows touch (the engine's planner statistic)."""
+        ok = idx < self.dim
+        if not ok.any():
+            return 1
+        return int(np.unique(idx[ok] // self.spec.tile).size)
+
+    def _refresh_plan_stats(self):
+        """Cache the S-side planner statistics so the serving hot path
+        (query → plan_for) does no O(shards × dim) host work — mirrors the
+        engine's ``_refresh_plan_stats``; only mutations change these
+        (every mutation path runs ``_upload_stacks``, which calls this)."""
+        freq = np.zeros(self.dim, np.int64)
+        for shard in self.shards:
+            freq += shard.dim_freq
+        (dims,) = np.nonzero(freq)
+        self._occupied_tiles = (
+            int(np.unique(dims // self.tile).size) if dims.size else 1
+        )
+        self._total_rows = sum(s.n_s for s in self.shards)
+        self._f_mean = float(np.mean([s._f_mean for s in self.shards]))
+
+    @property
+    def occupied_tiles(self) -> int:
+        """Dim-tiles the whole datastore touches (cached; planner statistic)."""
+        return self._occupied_tiles
+
+    def plan_for(self, R):
+        n_r, f_r, _ = _shape_stats(R)
+        spec = dataclasses.replace(
+            self.spec, algorithm=self.algorithm, s_block=self.s_block
+        )
+        return plan((n_r, f_r, self.dim), (self._total_rows, self._f_mean, self.dim),
+                    spec, occupied_tiles=self._occupied_tiles,
+                    calibration=self.calibration)
+
+    def query(self, R: SparseBatch, stats: Optional[JoinStats] = None) -> JoinResult:
+        """R ⋈_KNN S over all shards.  Returns stable global S ids.
+
+        One device dispatch (the jitted fan-out program) and one host sync
+        (the result pull) per R block, independent of the shard count.
+        """
+        t_q = time.perf_counter()
+        stats = stats if stats is not None else JoinStats()
+        if R.dim != self.dim:
+            raise ValueError(f"dim mismatch: store has {self.dim}, got {R.dim}")
+        n_r = R.num_vectors
+        rb = min(self.spec.r_block or self.plan_for(R).r_block, n_r)
+        st = self._stacks
+        out_scores, out_ids = [], []
+        for r0 in range(0, n_r, rb):
+            br, r_valid = _pad_block(R, r0, rb)
+            fn = self._query_fn(rb)
+            if self.algorithm == "bf":
+                state = fn(
+                    br.indices, br.values, br.nnz,
+                    st["idx"], st["val"], st["nnz"], st["ids"], st["valid"],
+                )
+            elif self.algorithm == "iib":
+                prep = prepare_r_block_inputs(br, "iib", self.tile)
+                state = fn(
+                    prep["r_tiles"], prep["tiles"],
+                    st["rows"], st["vals"], st["counts"], st["ids"], st["valid"],
+                )
+            else:
+                prep = prepare_r_block_inputs(
+                    br, "iiib", self.tile,
+                    rank_np=self._rank_np, rank_dev=self._rank_dev,
+                )
+                state, kept, thr = fn(
+                    prep["r_tiles"], prep["mwt"], prep["tiles"],
+                    jnp.asarray(r_valid),
+                    st["rows"], st["vals"], st["counts"], st["mass"],
+                    st["ids"], st["valid"],
+                )
+                stats.list_entries += int(np.asarray(kept).sum())
+                stats.min_prune_trace.append(np.asarray(thr))
+            stats.device_dispatches += 1
+            stats.blocks += self._num_blocks_stacked * self.n_shards
+            if self.algorithm == "bf":
+                stats.dense_pairs += (
+                    rb * self.s_block * self._num_blocks_stacked * self.n_shards
+                )
+            else:
+                stats.tiles_scored += (
+                    int(prep["tiles"].shape[0])
+                    * self._num_blocks_stacked * self.n_shards
+                )
+                if self.algorithm == "iib":
+                    stats.list_entries += sum(
+                        blk.list_total for s in self.shards for blk in s._blocks
+                    )
+            out_scores.append(np.asarray(state.scores)[r_valid])
+            out_ids.append(np.asarray(state.ids)[r_valid])
+            stats.host_syncs += 1                # the R block's result pull
+        dt = time.perf_counter() - t_q
+        stats.query_wall_s += dt
+        self.stats.query_wall_s += dt
+        self.stats.queries += 1
+        self.stats.device_dispatches += stats.device_dispatches
+        self.stats.host_syncs += stats.host_syncs
+        return JoinResult(
+            scores=jnp.asarray(np.concatenate(out_scores)),
+            ids=jnp.asarray(np.concatenate(out_ids)),
+            stats=stats,
+        )
+
+    # -- mutation ------------------------------------------------------------
+
+    def add(self, S_new: SparseBatch, ttl: Optional[float] = None,
+            now: Optional[float] = None) -> np.ndarray:
+        """Append a batch to the datastore; returns the new rows' global ids.
+
+        Balance policy: the whole batch lands on the shard with the fewest
+        live rows (chunked callers — the serving shape — converge to
+        balanced shards; a single giant batch should be pre-chunked).  Only
+        the target shard's TAIL blocks rebuild their tile indexes (the
+        engine's extend() semantics); the retained prefix and the other
+        shards' index arrays are reused (padded if the list bound grew).
+        ``ttl`` attaches an expiry deadline ``now + ttl`` consumed by
+        :meth:`expire`.
+        """
+        if S_new.dim != self.dim:
+            raise ValueError(f"dim mismatch: store has {self.dim}, got {S_new.dim}")
+        t0 = time.perf_counter()
+        tgt = int(np.argmin([s.live_rows for s in self.shards]))
+        deadline = None
+        if ttl is not None:
+            deadline = (time.time() if now is None else now) + float(ttl)
+        from_block = self.shards[tgt].n_s // self.s_block
+        self.shards[tgt].extend(S_new, deadline=deadline)
+        n_new = S_new.num_vectors
+        gids = np.arange(self._next_gid, self._next_gid + n_new, dtype=np.int32)
+        self._gids[tgt] = np.concatenate([self._gids[tgt], gids])
+        self._next_gid += n_new
+        self._shard_arrays[tgt] = self._assemble_shard(tgt, from_block=from_block)
+        self._upload_stacks()
+        self.stats.build_wall_s += time.perf_counter() - t0
+        return gids
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by global id across shards — a valid-mask update,
+        never an index rebuild (until :meth:`compact`)."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        newly = 0
+        for i, shard in enumerate(self.shards):
+            local = np.nonzero(np.isin(self._gids[i], ids))[0]
+            if local.size:
+                newly += shard.delete(local)
+        if newly:
+            self.stats.deleted += newly
+            if not self._maybe_compact():
+                self._refresh_valid()
+        return newly
+
+    def expire(self, now: Optional[float] = None) -> int:
+        """Tombstone rows whose TTL deadline has passed."""
+        now = time.time() if now is None else now
+        newly = sum(shard.expire(now) for shard in self.shards)
+        if newly:
+            self.stats.expired += newly
+            if not self._maybe_compact():
+                self._refresh_valid()
+        return newly
+
+    def _maybe_compact(self) -> bool:
+        """Compact shards over the dead-fraction threshold.  Returns True
+        when a compaction ran — its full stack upload already carries every
+        shard's fresh valid mask, so the caller skips _refresh_valid()."""
+        over = [
+            i for i, s in enumerate(self.shards)
+            if s.dead_rows and s.dead_rows / s.n_s >= self.auto_compact
+        ]
+        if over:
+            self.compact(shards=over)
+            return True
+        return False
+
+    def compact(self, shards: Optional[Sequence[int]] = None) -> int:
+        """Physically reclaim tombstoned rows — the real rebuild that
+        delete()/expire() defer.  Re-assembles only the compacted shards'
+        stack slices; global ids of surviving rows are unchanged (the store
+        owns the id map).  A fully-dead shard compacts to the engine's
+        single tombstoned placeholder row (its id kept in the map, never
+        offered) and becomes the balance policy's next add() target."""
+        t0 = time.perf_counter()
+        removed = 0
+        targets = range(self.n_shards) if shards is None else shards
+        changed = []
+        for i in targets:
+            shard = self.shards[i]
+            if shard.dead_rows == 0:
+                continue
+            removed += shard.compact()
+            # follow the engine's surviving-row choice exactly (incl. the
+            # placeholder row a fully-dead shard keeps)
+            self._gids[i] = self._gids[i][shard.last_compact_keep]
+            changed.append(i)
+            self._shard_arrays[i] = self._assemble_shard(i)
+        if changed:
+            self.stats.compactions += len(changed)
+            self._upload_stacks()
+        self.stats.build_wall_s += time.perf_counter() - t0
+        return removed
+
+    def refreeze(self) -> "ShardedKNNStore":
+        """Recompute the IIIB superset rank from the LIVE rows of every
+        shard (global frequencies) and reassemble all stacks — the store
+        face of ``SparseKNNIndex.refreeze()``."""
+        if self.algorithm != "iiib":
+            return self
+        t0 = time.perf_counter()
+        freq = np.zeros(self.dim, np.int64)
+        for shard in self.shards:
+            ok = (shard._idx < self.dim) & shard._alive[:, None]
+            np.add.at(freq, np.where(ok, shard._idx, 0).ravel(), ok.ravel())
+        self._rank_np = iiib_mod.s_frequency_rank(freq)
+        self._rank_dev = jnp.asarray(self._rank_np)
+        for i, shard in enumerate(self.shards):
+            shard.refreeze(frozen_rank=self._rank_np)
+            self._shard_arrays[i] = self._assemble_shard(i)
+        self._upload_stacks()
+        self.stats.build_wall_s += time.perf_counter() - t0
+        return self

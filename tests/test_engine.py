@@ -345,3 +345,176 @@ def test_dim_mismatch_rejected(small_rs):
         index.query(bad)
     with pytest.raises(ValueError):
         index.extend(bad)
+
+
+# ---------------------------------------------------------------------------
+# tombstones (delete / TTL), refreeze, planner calibration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["bf", "iib", "iiib"])
+def test_delete_matches_index_without_rows(small_rs, algorithm):
+    """delete() excludes rows with NO index rebuild; results match an index
+    built without them (id-mapped), in both cached and streaming modes."""
+    R, S = small_rs
+    spec = JoinSpec(k=5, algorithm=algorithm, r_block=24, s_block=32)
+    dead = [0, 7, 33, 79]
+    keep = np.setdiff1d(np.arange(S.num_vectors), dead)
+
+    index = SparseKNNIndex.build(S, spec)
+    builds = index.stats.index_builds
+    assert index.delete([dead[0]] * 3) == 1  # duplicates counted once
+    assert index.delete(dead) == 3
+    assert index.delete(dead) == 0          # idempotent
+    assert index.stats.index_builds == builds, "delete rebuilt an index"
+    assert (index.live_rows, index.dead_rows) == (76, 4)
+    res = index.query(R)
+
+    streaming = SparseKNNIndex.build(S, spec, cache_device_blocks=False)
+    streaming.delete(dead)
+    res_s = streaming.query(R)
+    np.testing.assert_array_equal(np.asarray(res.scores), np.asarray(res_s.scores))
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(res_s.ids))
+
+    fresh = SparseKNNIndex.build(_rows_subset(S, keep), spec).query(R)
+    ok = np.asarray(fresh.scores) > -np.inf
+    np.testing.assert_allclose(
+        np.asarray(res.scores), np.asarray(fresh.scores), atol=1e-5
+    )
+    np.testing.assert_array_equal(
+        np.where(ok, keep[np.asarray(fresh.ids)], -1),
+        np.where(ok, np.asarray(res.ids), -1),
+    )
+    # compact(): the real rebuild — ids shift to the fresh index's positions
+    assert index.compact() == 4
+    res_c = index.query(R)
+    np.testing.assert_allclose(
+        np.asarray(res_c.scores), np.asarray(fresh.scores), atol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(res_c.ids), np.asarray(fresh.ids))
+
+
+def _rows_subset(sb: SparseBatch, rows) -> SparseBatch:
+    import jax.numpy as jnp
+
+    return SparseBatch(
+        indices=jnp.asarray(np.asarray(sb.indices)[rows]),
+        values=jnp.asarray(np.asarray(sb.values)[rows]),
+        nnz=jnp.asarray(np.asarray(sb.nnz)[rows]),
+        dim=sb.dim,
+    )
+
+
+def test_ttl_expiry_and_warm_start_skip_dead(small_rs):
+    """extend(deadline=) rows vanish after expire(now); the warm-start
+    sampler never offers tombstoned rows."""
+    R, S = small_rs
+    spec = JoinSpec(k=5, algorithm="iiib", r_block=24, s_block=32, warm_start=0.2)
+    index = SparseKNNIndex.build(S, spec)
+    base = index.query(R)
+    extra = synthetic_sparse(16, dim=S.dim, nnz_mean=20, seed=9)
+    index.extend(extra, deadline=50.0)
+    assert index.expire(now=10.0) == 0      # not yet due
+    assert index.query(R).scores.shape == base.scores.shape
+    assert index.expire(now=50.0) == 16     # deadline inclusive
+    res = index.query(R)
+    # warm-start sample size tracks n_s, so the post-extend query routes
+    # some dots through the BF warm pass — identical up to fp re-association
+    np.testing.assert_allclose(
+        np.asarray(res.scores), np.asarray(base.scores), atol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(base.ids))
+    assert not np.isin(
+        np.asarray(res.ids), np.arange(S.num_vectors, S.num_vectors + 16)
+    ).any()
+
+
+def test_refreeze_recovers_prune_rate():
+    """ROADMAP open item: after heavy extend() drift the frozen IIIB rank
+    prunes less; refreeze() recomputes it — kept list entries drop, results
+    stay identical.  Drift shape: the new rows are dominated by fresh
+    'boilerplate' dims the queries never touch, which the stale rank sorts
+    AFTER the crossing (kept) and the refrozen rank sorts first (pruned)."""
+    import jax.numpy as jnp
+
+    rng_dim = 2048
+
+    def make(n, pools_counts, weights, seed):
+        rng = np.random.default_rng(seed)
+        rows_i, rows_v = [], []
+        for _ in range(n):
+            ds, ws = [], []
+            for (pool, cnt), w in zip(pools_counts, weights):
+                ds.append(rng.choice(pool, cnt, replace=False))
+                ws.append(w * (0.5 + rng.random(cnt)))
+            d = np.concatenate(ds)
+            order = np.argsort(d)
+            rows_i.append(d[order])
+            rows_v.append(np.concatenate(ws)[order].astype(np.float32))
+        return SparseBatch(
+            indices=jnp.asarray(np.stack(rows_i).astype(np.int32)),
+            values=jnp.asarray(np.stack(rows_v)),
+            nnz=jnp.asarray(np.full(n, len(rows_i[0]), np.int32)),
+            dim=rng_dim,
+        )
+
+    content = np.arange(0, 256)
+    boiler_old = np.arange(256, 512)
+    boiler_new = np.arange(512, 1024)
+    S1 = make(64, [(content, 16), (boiler_old, 16)], [1.0, 0.2], seed=1)
+    S2 = make(512, [(content, 8), (boiler_new, 24)], [1.0, 0.2], seed=2)
+    Rq = make(40, [(content, 24)], [2.0], seed=3)
+    spec = JoinSpec(k=5, algorithm="iiib", s_block=64, r_block=40, warm_start=0.2)
+    index = SparseKNNIndex.build(S1, spec)
+    index.extend(S2)
+    frozen = JoinStats()
+    r1 = index.query(Rq, stats=frozen)
+    builds = index.stats.index_builds
+    index.refreeze()
+    assert index.stats.index_builds > builds      # stacks really reassembled
+    refrozen = JoinStats()
+    r2 = index.query(Rq, stats=refrozen)
+    assert refrozen.list_entries < frozen.list_entries, (
+        frozen.list_entries, refrozen.list_entries
+    )
+    np.testing.assert_allclose(
+        np.asarray(r1.scores), np.asarray(r2.scores), atol=1e-5
+    )
+    ok = np.asarray(r1.scores) > -np.inf
+    np.testing.assert_array_equal(
+        np.where(ok, np.asarray(r1.ids), -1), np.where(ok, np.asarray(r2.ids), -1)
+    )
+
+
+def test_plan_accepts_calibration(tmp_path):
+    """plan(calibration=) consumes a dict or a JSON file and replaces the
+    hard-coded unit costs — an extreme indexed-cost factor flips the
+    algorithm choice; measured unit costs turn scores into seconds."""
+    shape = (1000, 8, 10_000)
+    default = plan(shape, shape, JoinSpec(k=5))
+    assert default.algorithm == "iiib"
+    forced = plan(shape, shape, JoinSpec(k=5), calibration={"index_cost_factor": 1e9})
+    assert forced.algorithm == "bf"
+
+    import json
+
+    path = tmp_path / "cal.json"
+    path.write_text(json.dumps({"c2_unit_s": 1e-10, "c3_unit_s": 2e-10}))
+    cal = plan(shape, shape, JoinSpec(k=5), calibration=str(path))
+    np.testing.assert_allclose(cal.cost_bf, default.cost_bf * 1e-10)
+    # engine carries the calibration into its own planning
+    S = synthetic_sparse(64, dim=512, nnz_mean=10, seed=1)
+    index = SparseKNNIndex.build(
+        S, JoinSpec(k=5), calibration={"index_cost_factor": 1e9}
+    )
+    assert index.algorithm == "bf"
+
+
+def test_roofline_calibrate_roundtrip(tmp_path):
+    """benchmarks/roofline.py --calibrate writes a record plan() accepts."""
+    from benchmarks.roofline import calibrate
+
+    path = str(tmp_path / "cal.json")
+    rec = calibrate(path, fast=True)
+    assert rec["c2_unit_s"] > 0 and rec["c3_unit_s"] > 0
+    p = plan((1000, 8, 10_000), (1000, 8, 10_000), JoinSpec(k=5), calibration=path)
+    assert p.cost_bf > 0
