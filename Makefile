@@ -1,12 +1,13 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test smoke bench bench-compare
+.PHONY: check test smoke serve-smoke bench bench-compare
 
 # tier-1 verify + engine/store smoke (index reuse + dispatch shape on CPU;
 # the multi-device store suite — tests/test_store.py, tests/test_distributed.py
 # — runs inside `test` via subprocesses that force virtual CPU devices)
-check: test smoke
+# + serving smoke (continuous-batching scheduler over the 4-shard store)
+check: test smoke serve-smoke
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -16,11 +17,20 @@ smoke:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 	$(PYTHON) -m benchmarks.run --smoke
 
+# tiny open-loop load through the scheduler: every request completes,
+# batches coalesce, results bit-match direct queries, zero query-time builds
+serve-smoke:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+	$(PYTHON) -m benchmarks.serve_load --smoke
+
 # machine-readable perf record for the PR trajectory (BENCH_*.json);
-# store streams record per-shard dispatch/sync counts on a 4-shard fan-out
+# store streams record per-shard dispatch/sync counts on a 4-shard fan-out,
+# the serving stream records the open-loop scheduler load test
 bench:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
-	$(PYTHON) -m benchmarks.run --fast --out BENCH_PR5.json
+	$(PYTHON) -m benchmarks.run --fast --out BENCH_PR6.json
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+	$(PYTHON) -m benchmarks.serve_load --fast --merge BENCH_PR6.json
 
 # fail if any algorithm regressed its dispatch/sync/index-build shape vs the
 # previous BENCH_*.json record (wall times are informational only)

@@ -11,8 +11,12 @@ regress the dispatch shape the engine exists to provide:
   * lifetime ``index_builds`` must not grow (build-once stays build-once).
 
 Wall times are printed for context but never gate (CI machines vary); the
-dispatch/sync/build counters are machine-independent.  Exit code 1 on any
-regression — ``make bench-compare`` wires this into CI.
+dispatch/sync/build counters are machine-independent.  The ``serving``
+stream (the open-loop load bench) gates separately — absolute bars
+(batched ≥ 3x serial queries/sec, zero query-time builds, bit-parity)
+plus wide relative bands on p99 / queries-per-sec / dispatches-per-
+request once two records carry it.  Exit code 1 on any regression —
+``make bench-compare`` wires this into CI.
 """
 from __future__ import annotations
 
@@ -43,11 +47,59 @@ def _latest_pair() -> tuple:
     return records[-2], records[-1]
 
 
+def compare_serving(ns: dict, os_: dict, rows: list, failures: list) -> None:
+    """Gate the serving stream (benchmarks/serve_load.py).
+
+    Absolute bars on the NEW record (they hold on any machine):
+      * batched scheduling ≥ 3x queries/sec over the batch-size-1 loop,
+      * zero query-time index builds, bit-parity, every request completed.
+    Relative bars once BOTH records carry a serving stream: the dispatch
+    shape (device dispatches per request — the batching efficiency) must
+    not grow, and p99 latency / queries-per-sec must stay within a 3x
+    band of the previous record (wide: CI wall clocks vary, collapses
+    don't).
+    """
+    absolute = {
+        "speedup_vs_serial>=3": ns.get("speedup_vs_serial", 0) >= 3.0,
+        "query_index_builds==0": ns.get("query_index_builds") == 0,
+        "parity_ok": bool(ns.get("parity_ok")),
+        "all_completed": ns.get("completed") == ns.get("requests"),
+    }
+    for label, ok in absolute.items():
+        rows.append(f"  {'serving':12s} {label:28s} {'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(f"serving.{label}")
+    if os_ is None:
+        rows.append(f"  {'serving':12s} (no serving stream in old record — "
+                    f"relative gates skipped)")
+        return
+    relative = {
+        "dispatches_per_request": (
+            ns.get("dispatches_per_request", 0.0),
+            os_.get("dispatches_per_request", 0.0) * 1.1,
+        ),
+        "p99_ms (3x band)": (ns.get("p99_ms", 0.0), os_.get("p99_ms", 0.0) * 3.0),
+        "-queries_per_s (3x band)": (
+            -ns.get("queries_per_s", 0.0), -os_.get("queries_per_s", 0.0) / 3.0,
+        ),
+    }
+    for metric, (new_v, bound) in relative.items():
+        ok = new_v <= bound
+        rows.append(f"  {'serving':12s} {metric:28s} "
+                    f"{round(new_v, 3):>8} <= {round(bound, 3):<8} "
+                    f"{'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(f"serving.{metric}: {new_v} > {bound}")
+
+
 def compare(old_path: str, new_path: str) -> int:
     old, new = _load(old_path), _load(new_path)
     failures = []
     rows = []
     for name, ns in new.get("streams", {}).items():
+        if name == "serving":
+            compare_serving(ns, old.get("streams", {}).get(name), rows, failures)
+            continue
         os_ = old.get("streams", {}).get(name)
         if os_ is None:
             continue

@@ -1,0 +1,301 @@
+"""Open-loop serving load bench: Poisson arrivals against the scheduler.
+
+Open-loop means arrivals do NOT wait for completions (the honest way to
+measure a serving system: a closed loop self-throttles and hides the
+latency cliff).  Thousands of small requests (1–4 sparse rows each)
+arrive on a Poisson process, pile up in flight, and the scheduler
+coalesces them into full r_block batches over the sharded store.  The
+bench records:
+
+  * p50/p99 submit→result latency and queries/sec, plus a 10-bucket
+    latency/throughput trajectory over the run;
+  * peak concurrent in-flight requests (the acceptance bar is ≥ 1k);
+  * a batch-size-1 baseline — the same requests served by direct
+    per-request ``store.query()`` calls — and the batched/serial
+    queries-per-sec speedup (the acceptance bar is ≥ 3x);
+  * a parity sample: scheduler results must be bit-identical to direct
+    ``store.query()`` on the same rows;
+  * the dispatch shape: device dispatches per request and query-time
+    index builds (must be 0 — build-once is the store's contract).
+
+  PYTHONPATH=src python -m benchmarks.serve_load --fast --merge BENCH_PR6.json
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python -m benchmarks.serve_load --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core import JoinSpec
+from repro.serve import KNNScheduler, QueueFull, ServeConfig
+from repro.sparse.datagen import synthetic_sparse
+from repro.sparse.format import SparseBatch
+from repro.store import ShardedKNNStore
+
+
+def slice_rows(R: SparseBatch, lo: int, hi: int) -> SparseBatch:
+    return SparseBatch(indices=R.indices[lo:hi], values=R.values[lo:hi],
+                       nnz=R.nnz[lo:hi], dim=R.dim)
+
+
+def make_workload(n_requests: int, rate: float, max_rows: int, k: int,
+                  dim: int, nnz: int, seed: int):
+    """Pre-sampled open-loop workload: arrival offsets (Poisson process),
+    per-request row spans into one shared R pool, and per-request k."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, max_rows + 1, n_requests)
+    bounds = np.concatenate([[0], np.cumsum(sizes)])
+    pool = synthetic_sparse(int(bounds[-1]), dim=dim, nnz_mean=nnz, seed=seed + 1)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    ks = rng.integers(max(1, k - 2), k + 1, n_requests)
+    return pool, bounds, arrivals, ks
+
+
+async def open_loop(store, pool, bounds, arrivals, ks, config: ServeConfig):
+    """Fire the workload at its recorded arrival times; resubmit on
+    admission bounces (after the advertised retry_after)."""
+    n = len(arrivals)
+    lat = np.zeros(n)
+    done_at = np.zeros(n)
+    bounces = 0
+
+    async def one(i: int):
+        nonlocal bounces
+        rows = slice_rows(pool, int(bounds[i]), int(bounds[i + 1]))
+        t0 = time.monotonic()
+        while True:
+            try:
+                await sched.submit(rows, k=int(ks[i]))
+                break
+            except QueueFull as e:
+                bounces += 1
+                await asyncio.sleep(e.retry_after_s)
+        lat[i] = time.monotonic() - t0
+        done_at[i] = time.monotonic()
+
+    async with KNNScheduler(store, config) as sched:
+        t_start = time.monotonic()
+        tasks = []
+        for i in range(n):
+            delay = t_start + arrivals[i] - time.monotonic()
+            if delay > 0:
+                await asyncio.sleep(delay)
+            tasks.append(asyncio.create_task(one(i)))
+        await asyncio.gather(*tasks)
+        wall = time.monotonic() - t_start
+        metrics = sched.metrics
+    return lat, done_at - t_start, wall, bounces, metrics
+
+
+def serial_baseline(store, pool, bounds, ks, sample: int):
+    """Batch-size-1 submit loop: per-request direct store.query()."""
+    n = min(sample, len(ks))
+    # warm every compiled (rb = request size) variant before timing
+    for size in sorted({int(bounds[i + 1] - bounds[i]) for i in range(n)}):
+        store.query(slice_rows(pool, 0, size))
+    lat = np.zeros(n)
+    t0 = time.monotonic()
+    for i in range(n):
+        t = time.monotonic()
+        store.query(slice_rows(pool, int(bounds[i]), int(bounds[i + 1])))
+        lat[i] = time.monotonic() - t
+    wall = time.monotonic() - t0
+    return {
+        "requests": n,
+        "queries_per_s": round(n / wall, 2),
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+    }
+
+
+def parity_sample(store, pool, bounds, ks, results_fn, sample: int) -> bool:
+    """Scheduler results must match direct per-request queries bitwise."""
+    idxs = np.linspace(0, len(ks) - 1, num=min(sample, len(ks)), dtype=int)
+    for i in idxs:
+        rows = slice_rows(pool, int(bounds[i]), int(bounds[i + 1]))
+        direct = store.query(rows)
+        ids, scores = results_fn(int(i))
+        di = np.asarray(direct.ids)[:, : int(ks[i])]
+        ds = np.asarray(direct.scores)[:, : int(ks[i])]
+        if not ((ids == di).all() and (scores == ds).all()):
+            return False
+    return True
+
+
+def trajectory(done_at: np.ndarray, lat: np.ndarray, buckets: int = 10):
+    """Latency/throughput over the run in ``buckets`` time slices."""
+    if len(done_at) == 0:
+        return []
+    edges = np.linspace(0, float(done_at.max()) + 1e-9, buckets + 1)
+    out = []
+    for b in range(buckets):
+        m = (done_at >= edges[b]) & (done_at < edges[b + 1])
+        if not m.any():
+            continue
+        span = edges[b + 1] - edges[b]
+        out.append({
+            "t_s": round(float(edges[b + 1]), 3),
+            "completed": int(m.sum()),
+            "qps": round(float(m.sum() / span), 1),
+            "p50_ms": round(float(np.percentile(lat[m], 50)) * 1e3, 3),
+        })
+    return out
+
+
+def run(n_requests: int, rate: float, n_store: int, dim: int, nnz: int,
+        k: int, r_block: int, s_block: int, window_s: float, seed: int,
+        serial_sample: int, algorithm: str = "iib"):
+    import jax
+
+    S = synthetic_sparse(n_store, dim=dim, nnz_mean=nnz, seed=seed)
+    spec = JoinSpec(k=k, algorithm=algorithm, r_block=r_block, s_block=s_block)
+    store = ShardedKNNStore.build(S, spec)
+
+    pool, bounds, arrivals, ks = make_workload(
+        n_requests, rate, max_rows=4, k=k, dim=dim, nnz=nnz, seed=seed)
+
+    serial = serial_baseline(store, pool, bounds, ks, serial_sample)
+
+    config = ServeConfig(r_block=r_block, window_s=window_s,
+                         queue_rows_hwm=4 * max(n_requests * 4, r_block))
+
+    # warm the one batch-shaped program (serial_baseline warmed its own
+    # per-size variants): a throwaway scheduler round with a full block,
+    # so the timed run measures serving, not XLA compilation
+    async def warm():
+        async with KNNScheduler(store, config) as sched:
+            await asyncio.gather(*[
+                sched.submit(slice_rows(pool, i, i + 1)) for i in range(r_block)
+            ])
+
+    asyncio.run(warm())
+
+    lat, done_at, wall, bounces, metrics = asyncio.run(
+        open_loop(store, pool, bounds, arrivals, ks, config))
+    summary = metrics.summary()
+
+    qps = n_requests / wall
+    record = {
+        "algorithm": algorithm,
+        "requests": n_requests,
+        "completed": summary["requests"]["completed"],
+        "rejected_bounces": bounces,
+        "failed": summary["requests"]["failed"],
+        "max_inflight": summary["requests"]["inflight_peak"],
+        "arrival_rate_per_s": rate,
+        "wall_s": round(wall, 4),
+        "queries_per_s": round(qps, 2),
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+        "batches": summary["batches"]["count"],
+        "mean_occupancy": summary["batches"]["mean_occupancy"],
+        "device_dispatches": summary["dispatch"]["device_dispatches"],
+        "dispatches_per_request": round(
+            summary["dispatch"]["device_dispatches"] / max(n_requests, 1), 4),
+        "query_index_builds": summary["dispatch"]["query_index_builds"],
+        "serial": serial,
+        "speedup_vs_serial": round(qps / serial["queries_per_s"], 2),
+        "trajectory": trajectory(done_at, lat),
+        "shards": store.n_shards,
+        "device_count": jax.device_count(),
+    }
+
+    # bit-parity of de-interleaved results vs direct per-request queries:
+    # re-serve a sample through a fresh scheduler and compare
+    sample_n = min(16, n_requests)
+
+    async def reserve():
+        out = {}
+        async with KNNScheduler(store, config) as sched:
+            idxs = np.linspace(0, n_requests - 1, num=sample_n, dtype=int)
+            outs = await asyncio.gather(*[
+                sched.submit(slice_rows(pool, int(bounds[i]), int(bounds[i + 1])),
+                             k=int(ks[i]))
+                for i in idxs
+            ])
+            for i, o in zip(idxs, outs):
+                out[int(i)] = o
+        return out
+
+    sampled = asyncio.run(reserve())
+    record["parity_ok"] = parity_sample(
+        store, pool, bounds, ks, lambda i: sampled[i], sample_n)
+    return record
+
+
+def smoke() -> int:
+    """CI gate (``make serve-smoke``): tiny load under forced virtual
+    devices.  Every submitted request must complete, results must be
+    bit-identical to direct queries, batching must actually coalesce
+    (> 1 request per dispatch), and the store must do ZERO query-time
+    index builds."""
+    record = run(n_requests=64, rate=4000.0, n_store=192, dim=512, nnz=16,
+                 k=5, r_block=32, s_block=48, window_s=0.005, seed=0,
+                 serial_sample=16)
+    checks = {
+        "all_completed_ok": record["completed"] == record["requests"],
+        "none_failed_ok": record["failed"] == 0,
+        "zero_query_builds_ok": record["query_index_builds"] == 0,
+        "coalesced_ok": record["requests"] > record["batches"],
+        "parity_ok": record["parity_ok"],
+    }
+    print(json.dumps({"serving": record, **checks}))
+    return 0 if all(checks.values()) else 1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI load: completed == submitted, zero "
+                         "query-time builds, bit-parity (exit 1 on failure)")
+    ap.add_argument("--fast", action="store_true", help="CI-sized record run")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="Poisson arrival rate (requests/s)")
+    ap.add_argument("--merge", default=None, metavar="BENCH.json",
+                    help="add the 'serving' stream to an existing perf record")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write a standalone record")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        return smoke()
+
+    n_requests = args.requests or (2000 if args.fast else 4000)
+    # arrivals must outpace service so in-flight climbs past 1k (open loop)
+    rate = args.rate or (n_requests / 0.35)
+    size = dict(n_store=512, dim=4096, nnz=32, k=5, r_block=64, s_block=128) \
+        if args.fast else dict(n_store=2048, dim=8192, nnz=64, k=5,
+                               r_block=128, s_block=256)
+    record = run(n_requests=n_requests, rate=rate, window_s=0.002,
+                 seed=args.seed, serial_sample=200, **size)
+    print(json.dumps({k: v for k, v in record.items() if k != "trajectory"},
+                     indent=1))
+    ok = (record["completed"] == record["requests"]
+          and record["parity_ok"]
+          and record["query_index_builds"] == 0)
+    if args.merge:
+        with open(args.merge) as f:
+            doc = json.load(f)
+        doc.setdefault("streams", {})["serving"] = record
+        with open(args.merge, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"merged serving stream into {args.merge}")
+    elif args.out:
+        with open(args.out, "w") as f:
+            json.dump({"streams": {"serving": record}}, f, indent=1)
+            f.write("\n")
+        print(f"wrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,24 +1,31 @@
-"""kNN-LM style retrieval-augmented serving over the MUTABLE datastore.
+"""kNN-LM retrieval serving through the continuous-batching scheduler.
 
-Decode-time hidden states join (as R) against a datastore of hidden-state
-keys (as S, sparse-ified by top-magnitude truncation — the standard trick
-for billion-entry datastores); the retrieved values' next tokens
-re-weight the LM distribution:
+Decode-time hidden states join (as R) against a MUTABLE datastore of
+hidden-state keys (as S, sparse-ified by top-magnitude truncation — the
+standard trick for billion-entry datastores); the retrieved values'
+next tokens re-weight the LM distribution:
 
     p(y) = (1 - lam) * p_LM(y) + lam * softmax_knn(y)
 
-This is the framework's KNN join running as a serving-side primitive
-(DESIGN.md §4 and §Sharded store): the datastore lives in a
-ShardedKNNStore — indexes built once per shard (a 1-shard store on a
-one-device host; the same script fans out under
-``XLA_FLAGS=--xla_force_host_platform_device_count=N``) — and the store
-stays MUTABLE while serving: every generated token's (hidden-state key →
-next token) pair is ``add()``-ed back with a TTL, expired entries are
-tombstoned per step without any index rebuild, and ``delete()`` evicts
-ids on demand.
+This is the showcase for the serving stack (DESIGN.md §7 + §8):
+
+* the datastore lives in a :class:`ShardedKNNStore` — indexes built once
+  per shard (1 shard on a one-device host; the same script fans out
+  under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``);
+* queries go through :class:`repro.serve.KNNScheduler`: the decode
+  step's retrieval submits alongside a stream of concurrent "other user"
+  requests, and the scheduler coalesces them into full r_block batches —
+  ONE store dispatch serves the decode token and the background traffic;
+* the store stays MUTABLE while serving: every generated token's
+  (hidden-state key → next token) pair is ``add()``-ed back with a TTL,
+  expired entries are tombstoned per step, and ``delete()`` evicts ids —
+  all through ``scheduler.mutate()``, serialized with batch dispatches,
+  with zero index rebuilds at query time.
 
   PYTHONPATH=src python examples/knnlm_serve.py
 """
+import asyncio
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -27,6 +34,7 @@ from repro.configs.base import get_config
 from repro.core import JoinSpec
 from repro.launch.serve import Request, Server
 from repro.models import model as M
+from repro.serve import KNNScheduler, ServeConfig
 from repro.sparse.format import SparseBatch
 from repro.store import ShardedKNNStore
 
@@ -43,7 +51,7 @@ def sparsify(h: np.ndarray, keep: int = 32) -> SparseBatch:
     )
 
 
-def main():
+async def main_async():
     cfg = get_config("qwen3-0.6b").reduced()
     srv = Server(cfg, batch=1, max_seq=64, seed=0)
     rng = np.random.default_rng(0)
@@ -59,81 +67,106 @@ def main():
 
     lam, k = 0.3, 8
     # build the sharded datastore ONCE (every local device holds one shard
-    # of S); decode-step queries fan out against the cached per-shard
-    # stacks, and the store stays mutable while serving
-    store = ShardedKNNStore.build(datastore, JoinSpec(k=k, algorithm="iib"))
+    # of S); all traffic below flows through the scheduler's batches
+    store = ShardedKNNStore.build(
+        datastore, JoinSpec(k=k, algorithm="iib", r_block=8))
     values = list(values)           # grows with the datastore
     ttl_steps = 6                   # generated entries live this many steps
+
+    # simulated concurrent users: perturbed datastore keys as 1-row queries
+    def other_user_query() -> SparseBatch:
+        base = keys[rng.integers(0, n_store)]
+        return sparsify((base + 0.1 * rng.standard_normal(base.shape))[None, :])
 
     # ---- serve one request with kNN interpolation -----------------------
     prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
     req = Request(0, prompt, max_new=8)
     assert srv.admit(req)
-    n_queries = 0
     step = 0
     generated = [req.out[-1]]
-    while srv.occupancy():
-        s = 0  # single slot
-        logits, cache = srv.decode(
-            srv.params, jnp.asarray(srv.slot_tok[s:s + 1]), srv.slot_cache[s],
-            jnp.int32(srv.slot_pos[s]),
-        )
-        srv.slot_cache[s] = cache
 
-        # query = current hidden state ~ final logits pre-softmax proxy:
-        # recompute hidden for the query token (teacher-forced 1-step)
-        qtok = jnp.asarray(srv.slot_tok[s:s + 1])
-        qh, _ = M.hidden_states(srv.params, cfg, {"tokens": qtok})
-        query = sparsify(np.asarray(qh[:, -1]).astype(np.float32))
+    sched = KNNScheduler(store, ServeConfig(r_block=8, window_s=0.005))
+    async with sched:
+        while srv.occupancy():
+            s = 0  # single slot
+            logits, cache = srv.decode(
+                srv.params, jnp.asarray(srv.slot_tok[s:s + 1]),
+                srv.slot_cache[s], jnp.int32(srv.slot_pos[s]),
+            )
+            srv.slot_cache[s] = cache
 
-        res = store.query(query)
-        n_queries += 1
-        ids = np.asarray(res.ids[0])
-        scores = np.asarray(res.scores[0])
-        valid = scores > -np.inf
+            # query = current hidden state ~ final logits pre-softmax proxy:
+            # recompute hidden for the query token (teacher-forced 1-step)
+            qtok = jnp.asarray(srv.slot_tok[s:s + 1])
+            qh, _ = M.hidden_states(srv.params, cfg, {"tokens": qtok})
+            query = sparsify(np.asarray(qh[:, -1]).astype(np.float32))
 
-        p_lm = np.asarray(jax.nn.softmax(logits[0, -1]))
-        p_knn = np.zeros_like(p_lm)
-        if valid.any():
-            w = np.exp(scores[valid] - scores[valid].max())
-            w /= w.sum()
-            for wi, sid in zip(w, ids[valid]):
-                p_knn[values[sid]] += wi
-            p = (1 - lam) * p_lm + lam * p_knn
-        else:
-            p = p_lm
-        nxt = int(p.argmax())
-        generated.append(nxt)
-        srv.slot_tok[s, 0] = nxt
-        srv.slot_pos[s] += 1
-        req.out.append(nxt)
+            # the decode-step retrieval rides one coalesced batch with the
+            # background users' requests — one store dispatch for all of them
+            (ids, scores), *_ = await asyncio.gather(
+                sched.submit(query, k=k),
+                *[sched.submit(other_user_query(), k=4) for _ in range(5)],
+            )
+            ids, scores = ids[0], scores[0]
+            valid = scores > -np.inf
 
-        # ---- mutate the datastore while serving ------------------------
-        # feed the fresh (key -> generated token) pair back with a TTL and
-        # tombstone whatever expired this step — no index rebuild either
-        # way (`query` already holds this step's sparsified hidden state)
-        new_gids = store.add(query, ttl=ttl_steps, now=float(step))
-        values.append(nxt)
-        assert len(values) == int(new_gids[-1]) + 1
-        store.expire(now=float(step))
-        step += 1
+            p_lm = np.asarray(jax.nn.softmax(logits[0, -1]))
+            p_knn = np.zeros_like(p_lm)
+            if valid.any():
+                w = np.exp(scores[valid] - scores[valid].max())
+                w /= w.sum()
+                for wi, sid in zip(w, ids[valid]):
+                    p_knn[values[sid]] += wi
+                p = (1 - lam) * p_lm + lam * p_knn
+            else:
+                p = p_lm
+            nxt = int(p.argmax())
+            generated.append(nxt)
+            srv.slot_tok[s, 0] = nxt
+            srv.slot_pos[s] += 1
+            req.out.append(nxt)
 
-        if len(req.out) >= req.max_new:
-            srv.slot_req[s] = None
+            # ---- mutate the datastore while serving --------------------
+            # feed the fresh (key -> generated token) pair back with a TTL
+            # and tombstone whatever expired this step — serialized with
+            # the query batches, no index rebuild either way
+            new_gids = await sched.mutate(
+                store.add, query, ttl=ttl_steps, now=float(step))
+            values.append(nxt)
+            assert len(values) == int(new_gids[-1]) + 1
+            await sched.mutate(store.expire, float(step))
+            step += 1
 
-    # explicit eviction: drop the two lowest-id seed entries
-    store.delete([0, 1])
-    builds_before = store.stats.index_builds
-    store.query(query)
-    assert store.stats.index_builds == builds_before, "query rebuilt an index!"
+            if len(req.out) >= req.max_new:
+                srv.slot_req[s] = None
+
+        # explicit eviction: drop the two lowest-id seed entries
+        await sched.mutate(store.delete, [0, 1])
+        builds_before = store.stats.index_builds
+        await sched.submit(query, k=k)
+        assert store.stats.index_builds == builds_before, "query rebuilt an index!"
+
+    m = sched.metrics
+    assert m.query_index_builds == 0, "serving performed a query-time build!"
+    assert m.completed == m.submitted
+    assert m.batches < m.completed, "no coalescing happened"
 
     print("prompt:   ", prompt.tolist())
     print("generated:", generated)
     print("datastore hits blended with lam =", lam)
     print(f"datastore: {store.stats.index_builds} block-index builds for "
-          f"{n_queries} decode-step queries over {store.n_shards} shard(s); "
+          f"{m.completed} scheduled queries over {store.n_shards} shard(s); "
           f"{store.stats.expired} entries TTL-expired, "
           f"{store.stats.deleted} deleted, live rows {store.num_vectors}")
+    lat = m.summary()["latency"]
+    occ = m.summary()["batches"]["mean_occupancy"]
+    print(f"serving:   {m.completed} requests in {m.batches} coalesced "
+          f"batches (occupancy {occ}), p50 {lat['p50_ms']}ms "
+          f"p99 {lat['p99_ms']}ms")
+
+
+def main():
+    asyncio.run(main_async())
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ lowers at 512 devices.
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
 import json
 import time
@@ -34,6 +35,8 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    t_admit: Optional[float] = None     # monotonic, set on slot admission
+    t_finish: Optional[float] = None
 
 
 class Server:
@@ -71,6 +74,7 @@ class Server:
     def admit(self, req: Request) -> bool:
         for s in range(self.batch):
             if self.slot_req[s] is None:
+                req.t_admit = time.monotonic()
                 prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
                 logits, cache = self.prefill(
                     self.params, self._stub_batch(prompt), self.slot_cache[s]
@@ -88,8 +92,26 @@ class Server:
 
     def _finish(self, s: int, req: Request):
         req.done = True
+        req.t_finish = time.monotonic()
         self.slot_req[s] = None  # slot freed: continuous batching
         self.finished.append(req)
+
+    def latency_summary(self) -> dict:
+        """p50/p99 admit→finish latency (ms) over completed requests —
+        the same percentile definition the query-serving front-end
+        (repro.serve.metrics) reports."""
+        from repro.serve.metrics import percentiles
+
+        lat = [
+            r.t_finish - r.t_admit
+            for r in self.finished
+            if r.t_admit is not None and r.t_finish is not None
+        ]
+        pct = percentiles(lat)
+        return {
+            "p50_ms": None if pct["p50"] is None else round(pct["p50"] * 1e3, 3),
+            "p99_ms": None if pct["p99"] is None else round(pct["p99"] * 1e3, 3),
+        }
 
     def step(self):
         """One decode step for every occupied slot."""
@@ -131,18 +153,18 @@ def main(argv=None):
     if args.smoke:
         cfg = cfg.reduced()
     rng = np.random.default_rng(args.seed)
-    pending = [
+    pending = collections.deque(
         Request(i, rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
                 args.max_new)
         for i in range(args.requests)
-    ]
+    )
     srv = Server(cfg, args.batch, args.max_seq)
 
     t0 = time.time()
     steps = 0
     while pending or srv.occupancy():
         while pending and srv.admit(pending[0]):
-            pending.pop(0)
+            pending.popleft()
         srv.step()
         steps += 1
         if steps > 10_000:
@@ -157,6 +179,7 @@ def main(argv=None):
         "tok_per_s": round(total_tokens / max(dt, 1e-9), 1),
         "total_tokens": total_tokens,
         "tokens_per_request": tokens_per_request,
+        "latency_ms": srv.latency_summary(),
     }))
     return 0
 

@@ -13,8 +13,10 @@ mitigations implemented here:
   is skipped or double-counted.  The restore path uses the elastic
   ``shard_fn``, so recovery onto a *smaller* surviving mesh (lost pod) is
   the same code path as same-size restart.
-* ``RetryPolicy`` bounds retries with exponential backoff; a
-  non-retryable error (assertion, NaN guard) propagates immediately.
+* ``RetryPolicy`` bounds retries with (optionally jittered) exponential
+  backoff; a non-retryable error (assertion, NaN guard) propagates
+  immediately.  ``with_timeout`` is the reusable call-level watchdog
+  (the serve scheduler wraps each batch dispatch in it).
 * **Straggler levers** (documented here, wired where they act):
   1. input prefetch depth ≥ 2 (data/pipeline.py) — a slow input host
      overlaps with compute;
@@ -50,15 +52,59 @@ def guard_finite(name: str, value) -> None:
 
 @dataclasses.dataclass
 class RetryPolicy:
+    """Bounded exponential backoff, optionally jittered.
+
+    ``jitter`` is a fraction: each delay is scaled by ``1 + U(0, jitter)``
+    so a fleet of retriers (e.g. the serve scheduler's batch dispatches)
+    doesn't thundering-herd the same instant.  ``delays()`` returns a
+    materialized list — safe to iterate more than once (the old generator
+    silently yielded nothing on a second pass) and cheap to log.
+    """
+
     max_retries: int = 3
     backoff_s: float = 1.0
     backoff_mult: float = 2.0
+    jitter: float = 0.0
 
-    def delays(self):
+    def delays(self, seed: Optional[int] = None):
+        rng = np.random.default_rng(seed)
+        out = []
         d = self.backoff_s
         for _ in range(self.max_retries):
-            yield d
+            scale = 1.0 + (rng.uniform(0.0, self.jitter) if self.jitter else 0.0)
+            out.append(d * scale)
             d *= self.backoff_mult
+        return out
+
+
+def with_timeout(fn: Callable, timeout_s: Optional[float], *args, **kwargs):
+    """Run ``fn(*args, **kwargs)``, raising ``TimeoutError`` after
+    ``timeout_s`` seconds (None = no watchdog, call inline).
+
+    The serve scheduler's per-batch watchdog: a wedged device dispatch
+    must not hang the whole serving loop — the caller's RetryPolicy takes
+    over instead.  The abandoned call keeps running on its daemon thread
+    (XLA dispatches are not interruptible); this bounds *caller* latency,
+    the same trade ``Supervisor.step_timeout`` makes for training steps.
+    """
+    if timeout_s is None:
+        return fn(*args, **kwargs)
+    box: dict = {}
+
+    def _run():
+        try:
+            box["value"] = fn(*args, **kwargs)
+        except BaseException as e:  # noqa: BLE001 — relayed to the caller
+            box["error"] = e
+
+    t = threading.Thread(target=_run, daemon=True)
+    t.start()
+    t.join(timeout_s)
+    if t.is_alive():
+        raise TimeoutError(f"{getattr(fn, '__name__', fn)!s} exceeded {timeout_s}s")
+    if "error" in box:
+        raise box["error"]
+    return box.get("value")
 
 
 class _Watchdog:
@@ -111,7 +157,7 @@ class Supervisor:
 
     def run(self, start_step: int, num_steps: int) -> int:
         step = start_step
-        delays = self.policy.delays()
+        delays = iter(self.policy.delays())
         while step < num_steps:
             try:
                 self.watchdog.arm()

@@ -1,0 +1,200 @@
+"""Serving metrics: rolling latency percentiles, queue depth, batch
+occupancy, throughput, and the store's dispatch counters.
+
+The scheduler feeds every event in here (`on_submit` / `on_reject` /
+`on_batch` / `on_complete`); nothing in this module touches the event
+loop or the device, so the same accounting runs inside tests, the
+open-loop load bench (`benchmarks/serve_load.py`), and the kNN-LM
+example.  `summary()` is the JSON schema DESIGN.md §8 documents — it is
+what `BENCH_PR6.json`'s ``serving`` stream records and what
+`benchmarks/compare.py` gates on.
+
+Latency percentiles are computed over a bounded rolling window (default
+8192 most-recent samples) so a long-running server's summary reflects
+recent behaviour, not its whole lifetime; counters are lifetime.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def percentiles(samples, points=(50.0, 99.0)) -> Dict[str, Optional[float]]:
+    """``{"p50": ..., "p99": ...}`` over ``samples`` (None when empty).
+
+    Shared with ``launch/serve.py``'s per-request token-serving summary —
+    one definition of "p99" across both serving front-ends.
+    """
+    out: Dict[str, Optional[float]] = {}
+    arr = np.asarray(list(samples), dtype=np.float64)
+    for p in points:
+        key = f"p{p:g}"
+        out[key] = float(np.percentile(arr, p)) if arr.size else None
+    return out
+
+
+class RollingWindow:
+    """Bounded sample window with percentile queries."""
+
+    def __init__(self, maxlen: int = 8192):
+        self._samples: collections.deque = collections.deque(maxlen=maxlen)
+        self.count = 0          # lifetime observations (window is bounded)
+
+    def record(self, value: float) -> None:
+        self._samples.append(float(value))
+        self.count += 1
+
+    def percentile(self, p: float) -> Optional[float]:
+        if not self._samples:
+            return None
+        return float(np.percentile(np.asarray(self._samples), p))
+
+    def mean(self) -> Optional[float]:
+        if not self._samples:
+            return None
+        return float(np.mean(np.asarray(self._samples)))
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Scheduler-lifetime accounting (see module docstring for scope)."""
+
+    r_block: int = 0                 # batch geometry (occupancy denominator)
+
+    # request counters
+    submitted: int = 0
+    completed: int = 0
+    rejected: int = 0                # admission-control bounces
+    failed: int = 0                  # retries exhausted → future errored
+    deadline_misses: int = 0         # delivered after their deadline
+
+    # batch counters
+    batches: int = 0
+    batch_rows: int = 0              # live rows over all batches
+    retries: int = 0                 # batch dispatch retries
+    timeouts: int = 0                # batch watchdog firings
+
+    # store dispatch counters (summed JoinStats of every batch query)
+    device_dispatches: int = 0
+    host_syncs: int = 0
+    query_index_builds: int = 0      # MUST stay 0: build-once is the contract
+
+    # gauges
+    queue_depth: int = 0             # rows currently queued (scheduler-owned)
+    queue_depth_peak: int = 0
+    inflight: int = 0                # requests admitted but not completed
+    inflight_peak: int = 0
+
+    ewma_batch_s: float = 0.0        # dispatch wall-time estimate (deadline
+    ewma_alpha: float = 0.25         # pressure uses this as service_est)
+
+    def __post_init__(self):
+        self.latency = RollingWindow()        # submit → result, seconds
+        self.batch_wall = RollingWindow()     # per-batch dispatch seconds
+        self.occupancy = RollingWindow()      # live rows / r_block per batch
+        self._t0 = time.monotonic()
+
+    # -- scheduler hooks -----------------------------------------------------
+
+    def on_submit(self, rows: int) -> None:
+        self.submitted += 1
+        self.inflight += 1
+        self.inflight_peak = max(self.inflight_peak, self.inflight)
+        self.queue_depth += rows
+        self.queue_depth_peak = max(self.queue_depth_peak, self.queue_depth)
+
+    def on_reject(self) -> None:
+        self.rejected += 1
+
+    def on_batch_start(self, rows: int) -> None:
+        self.queue_depth -= rows
+
+    def on_batch(self, rows: int, wall_s: float, stats=None) -> None:
+        self.batches += 1
+        self.batch_rows += rows
+        self.batch_wall.record(wall_s)
+        if self.r_block:
+            self.occupancy.record(rows / self.r_block)
+        if self.ewma_batch_s == 0.0:
+            self.ewma_batch_s = wall_s
+        else:
+            a = self.ewma_alpha
+            self.ewma_batch_s = (1 - a) * self.ewma_batch_s + a * wall_s
+        if stats is not None:
+            self.device_dispatches += stats.device_dispatches
+            self.host_syncs += stats.host_syncs
+
+    def on_complete(self, latency_s: float, missed_deadline: bool = False) -> None:
+        self.completed += 1
+        self.inflight -= 1
+        self.latency.record(latency_s)
+        if missed_deadline:
+            self.deadline_misses += 1
+
+    def on_fail(self, n_requests: int) -> None:
+        self.failed += n_requests
+        self.inflight -= n_requests
+
+    # -- reporting -----------------------------------------------------------
+
+    @property
+    def elapsed_s(self) -> float:
+        return time.monotonic() - self._t0
+
+    @property
+    def queries_per_s(self) -> float:
+        return self.completed / max(self.elapsed_s, 1e-9)
+
+    def summary(self) -> dict:
+        """The DESIGN.md §8 metrics schema (JSON-able)."""
+        lat = {
+            "p50_ms": _ms(self.latency.percentile(50)),
+            "p99_ms": _ms(self.latency.percentile(99)),
+            "mean_ms": _ms(self.latency.mean()),
+        }
+        return {
+            "requests": {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "rejected": self.rejected,
+                "failed": self.failed,
+                "deadline_misses": self.deadline_misses,
+                "inflight_peak": self.inflight_peak,
+            },
+            "latency": lat,
+            "throughput": {
+                "queries_per_s": round(self.queries_per_s, 2),
+                "rows_per_s": round(
+                    self.batch_rows / max(self.elapsed_s, 1e-9), 2
+                ),
+                "elapsed_s": round(self.elapsed_s, 4),
+            },
+            "batches": {
+                "count": self.batches,
+                "mean_occupancy": _r4(self.occupancy.mean()),
+                "mean_wall_ms": _ms(self.batch_wall.mean()),
+                "retries": self.retries,
+                "timeouts": self.timeouts,
+            },
+            "queue": {
+                "depth": self.queue_depth,
+                "depth_peak": self.queue_depth_peak,
+            },
+            "dispatch": {
+                "device_dispatches": self.device_dispatches,
+                "host_syncs": self.host_syncs,
+                "query_index_builds": self.query_index_builds,
+            },
+        }
+
+
+def _ms(v: Optional[float]) -> Optional[float]:
+    return None if v is None else round(v * 1e3, 3)
+
+
+def _r4(v: Optional[float]) -> Optional[float]:
+    return None if v is None else round(v, 4)

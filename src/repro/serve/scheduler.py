@@ -1,0 +1,406 @@
+"""Continuous-batching query scheduler over :class:`ShardedKNNStore`.
+
+The store (DESIGN.md §7) answers one R block per ``shard_map`` dispatch,
+but real traffic is millions of users each submitting a *few* sparse
+rows — at batch size 1 the paper's block-geometry wins (C2/C3 cost
+model) are wasted.  This is the LLM-serving continuous-batching pattern
+(``launch/serve.py``'s token server, transplanted to the query side):
+
+* ``submit(rows, k, deadline)`` — an awaitable that admits a request
+  into a bounded queue and resolves to its ``(ids, scores)`` once a
+  batch containing it completes.  Admission control: past
+  ``queue_rows_hwm`` queued rows the scheduler rejects with
+  :class:`QueueFull` carrying a ``retry_after_s`` estimate
+  (reject-early beats queue-forever — the open-loop bench shows the
+  latency cliff this prevents).
+
+* **Coalescing** — queued requests are packed FIFO into one
+  ``r_block``-row :class:`SparseBatch` (whole requests only; rows of one
+  request are never split across batches).  The batch is padded to
+  exactly ``r_block`` rows / a bucketed feature width so every dispatch
+  reuses ONE compiled fan-out program (`store._query_fn`); the pad rows
+  are empty (nnz = 0) and are dropped at de-interleave time.  Padding
+  never changes results: rows are independent in every algorithm, and
+  IIIB's batch-global MinPruneScore only moves *work*, not answers
+  (Theorem 1 masks provably-safe entries only).
+
+* **Flush policy** — a batch is dispatched when the first of these
+  fires: (1) *block-full*: queued rows ≥ ``r_block``; (2) *window
+  expiry*: the oldest queued request has waited ``window_s``;
+  (3) *deadline pressure*: the nearest request deadline minus the
+  EWMA batch service time (minus ``slack_s``) has arrived.
+
+* **Dispatch** — one ``store.query()`` per batch, on a single-thread
+  executor so the event loop (and therefore ``submit()``) never blocks
+  on device work: the flush path takes requests off the queue and
+  returns; the queue is open for new submissions while the batch is in
+  flight (tests assert this).  Each dispatch is wrapped in
+  ``runtime.fault.with_timeout`` and retried per
+  ``runtime.fault.RetryPolicy`` (jittered backoff); exhausted retries
+  fail only that batch's futures.
+
+* **De-interleaving** — request i owns rows ``[off_i, off_i + n_i)`` of
+  the batch; its ids/scores slice out with its own ``k`` (any
+  ``k ≤ store.spec.k`` — top-k prefixes of a longer top-k are exact).
+  Global store ids pass through untouched, so results are bit-identical
+  to per-request direct ``store.query()`` calls.
+
+* **Mutations** — ``mutate(fn, *args)`` runs a store mutation
+  (``add``/``delete``/``expire``/``compact``) on the same single-thread
+  executor, serialized with batch dispatches: the store never sees a
+  query and a stack swap concurrently.  ``examples/knnlm_serve.py``
+  feeds per-token adds + TTL expiry through this while serving.
+
+Everything observable lands in :class:`~repro.serve.metrics.ServeMetrics`
+(rolling p50/p99, queue depth, batch occupancy, queries/sec, the store's
+dispatch counters) — ``summary()`` is the record `benchmarks/serve_load.py`
+writes to ``BENCH_PR6.json``.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import concurrent.futures
+import dataclasses
+import time
+from typing import Any, Callable, Deque, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.fault import RetryPolicy, with_timeout
+from repro.serve.metrics import ServeMetrics
+from repro.sparse.format import SparseBatch
+
+
+class QueueFull(RuntimeError):
+    """Admission control bounce; retry after ``retry_after_s`` seconds."""
+
+    def __init__(self, retry_after_s: float):
+        super().__init__(f"serve queue over high-water mark; "
+                         f"retry after {retry_after_s:.3f}s")
+        self.retry_after_s = retry_after_s
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Scheduler knobs (DESIGN.md §8 documents the policy they drive).
+
+    ``r_block``     — coalesced batch geometry; defaults to the store's
+                      resolved plan.
+    ``window_s``    — micro-batch window: max time the oldest request
+                      waits before a partial batch flushes.
+    ``queue_rows_hwm`` — admission high-water mark in queued ROWS
+                      (requests are variable-sized; rows are the unit the
+                      device cost scales with).  Default 64 × r_block.
+    ``slack_s``     — safety margin subtracted when converting a request
+                      deadline into a flush time.
+    ``batch_timeout_s`` — per-dispatch watchdog (None = no watchdog).
+    ``retry``       — RetryPolicy for failed/timed-out batch dispatches.
+    ``feature_bucket`` — batch feature width is bucketed up to a multiple
+                      of this so compiled shapes are reused (8 keeps the
+                      variant count tiny without much pad waste).
+    """
+
+    r_block: Optional[int] = None
+    window_s: float = 0.002
+    queue_rows_hwm: Optional[int] = None
+    slack_s: float = 0.0
+    batch_timeout_s: Optional[float] = None
+    retry: RetryPolicy = dataclasses.field(
+        default_factory=lambda: RetryPolicy(max_retries=2, backoff_s=0.01,
+                                            backoff_mult=2.0, jitter=0.25)
+    )
+    feature_bucket: int = 8
+
+
+@dataclasses.dataclass
+class _Pending:
+    rid: int
+    idx: np.ndarray            # (n, f) int32, sentinel-padded
+    val: np.ndarray            # (n, f) f32
+    nnz: np.ndarray            # (n,) int32
+    k: int
+    t_submit: float
+    t_deadline: Optional[float]          # absolute monotonic, or None
+    future: asyncio.Future
+
+
+def _bucket_up(n: int, m: int) -> int:
+    return max(m, -(-n // m) * m)
+
+
+class KNNScheduler:
+    """Async continuous-batching front-end for a (sharded) KNN store.
+
+    ``store`` needs ``dim``, ``spec.k``, ``query(SparseBatch) ->
+    JoinResult`` and (optionally) ``stats.index_builds`` — i.e. a
+    :class:`~repro.store.ShardedKNNStore` or a single-device
+    :class:`~repro.core.engine.SparseKNNIndex`.
+
+    Use as an async context manager, or call ``start()`` / ``stop()``::
+
+        async with KNNScheduler(store, ServeConfig(r_block=64)) as sched:
+            ids, scores = await sched.submit(rows, k=5)
+    """
+
+    def __init__(self, store, config: Optional[ServeConfig] = None,
+                 metrics: Optional[ServeMetrics] = None):
+        self.store = store
+        cfg = config or ServeConfig()
+        if cfg.r_block is None:
+            rb = getattr(store.spec, "r_block", None)
+            if rb is None and hasattr(store, "plan_for"):
+                f_mean = float(getattr(store, "_f_mean", 16.0))
+                rb = store.plan_for((256, f_mean, store.dim)).r_block
+            cfg = dataclasses.replace(cfg, r_block=int(rb or 64))
+        if cfg.queue_rows_hwm is None:
+            cfg = dataclasses.replace(cfg, queue_rows_hwm=64 * cfg.r_block)
+        self.config = cfg
+        self.r_block = cfg.r_block
+        self.k_max = int(store.spec.k)
+        self.dim = int(store.dim)
+        self.metrics = metrics or ServeMetrics(r_block=self.r_block)
+        self.metrics.r_block = self.r_block
+
+        self._pending: Deque[_Pending] = collections.deque()
+        self._queued_rows = 0
+        self._next_rid = 0
+        self._running = False
+        self._event: Optional[asyncio.Event] = None
+        self._flusher: Optional[asyncio.Task] = None
+        self._dispatches: set = set()
+        self._exec: Optional[concurrent.futures.ThreadPoolExecutor] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    async def start(self) -> "KNNScheduler":
+        if self._running:
+            return self
+        self._running = True
+        self._event = asyncio.Event()
+        # ONE worker: batch dispatches and store mutations serialize here,
+        # so the store never races a query against a stack swap
+        self._exec = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="knn-serve-dispatch"
+        )
+        self._flusher = asyncio.create_task(self._flush_loop())
+        return self
+
+    async def stop(self, drain: bool = True) -> None:
+        """Stop the scheduler; ``drain=True`` flushes and completes every
+        queued request first, ``drain=False`` fails them."""
+        if not self._running:
+            return
+        self._running = False
+        if not drain:
+            for req in self._pending:
+                if not req.future.done():
+                    req.future.set_exception(
+                        RuntimeError("scheduler stopped without drain"))
+            self.metrics.on_fail(len(self._pending))
+            self.metrics.queue_depth -= self._queued_rows
+            self._pending.clear()
+            self._queued_rows = 0
+        self._event.set()
+        await self._flusher
+        while self._dispatches:
+            await asyncio.gather(*tuple(self._dispatches))
+        self._exec.shutdown(wait=True)
+
+    async def __aenter__(self) -> "KNNScheduler":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop(drain=True)
+
+    # -- submission ----------------------------------------------------------
+
+    async def submit(self, rows: SparseBatch, k: Optional[int] = None,
+                     deadline: Optional[float] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Admit one request; resolves to ``(ids, scores)`` of shape
+        ``(n_rows, k)``.  ``deadline`` is a latency budget in seconds from
+        now — it *pressures* the flush policy; a missed deadline is still
+        delivered (and counted in ``metrics.deadline_misses``).
+
+        Raises :class:`QueueFull` past the high-water mark — the caller
+        should back off ``retry_after_s`` and resubmit.
+        """
+        if not self._running:
+            raise RuntimeError("scheduler is not running (use `async with`)")
+        if rows.dim != self.dim:
+            raise ValueError(f"dim mismatch: store has {self.dim}, got {rows.dim}")
+        n = rows.num_vectors
+        if n == 0:
+            return (np.empty((0, k or self.k_max), np.int32),
+                    np.empty((0, k or self.k_max), np.float32))
+        if n > self.r_block:
+            raise ValueError(
+                f"request has {n} rows > r_block={self.r_block}; pre-chunk it")
+        k = self.k_max if k is None else int(k)
+        if not 0 < k <= self.k_max:
+            raise ValueError(f"k={k} not in (0, {self.k_max}] (store's k)")
+
+        if self._queued_rows + n > self.config.queue_rows_hwm:
+            self.metrics.on_reject()
+            raise QueueFull(self._retry_after())
+
+        now = time.monotonic()
+        req = _Pending(
+            rid=self._next_rid,
+            idx=np.asarray(rows.indices, np.int32),
+            val=np.asarray(rows.values, np.float32),
+            nnz=np.asarray(rows.nnz, np.int32),
+            k=k, t_submit=now,
+            t_deadline=None if deadline is None else now + float(deadline),
+            future=asyncio.get_running_loop().create_future(),
+        )
+        self._next_rid += 1
+        self._pending.append(req)
+        self._queued_rows += n
+        self.metrics.on_submit(n)
+        self._event.set()
+        return await req.future
+
+    async def mutate(self, fn: Callable, *args, **kwargs) -> Any:
+        """Run a store mutation serialized with batch dispatches."""
+        if not self._running:
+            raise RuntimeError("scheduler is not running")
+        loop = asyncio.get_running_loop()
+        return await loop.run_in_executor(
+            self._exec, lambda: fn(*args, **kwargs))
+
+    def _retry_after(self) -> float:
+        """Drain-time estimate for a rejected caller: queued batches ×
+        the EWMA batch service time (floor: one window)."""
+        batches_ahead = max(1, -(-self._queued_rows // self.r_block))
+        est = self.metrics.ewma_batch_s or self.config.window_s
+        return max(self.config.window_s, batches_ahead * est)
+
+    # -- flush policy --------------------------------------------------------
+
+    def _flush_at(self) -> float:
+        """Absolute monotonic time the current partial batch must flush."""
+        oldest = self._pending[0].t_submit + self.config.window_s
+        t = oldest
+        est = self.metrics.ewma_batch_s or 0.0
+        for req in self._pending:
+            if req.t_deadline is not None:
+                t = min(t, req.t_deadline - est - self.config.slack_s)
+        return t
+
+    async def _flush_loop(self) -> None:
+        while True:
+            if not self._pending:
+                if not self._running:
+                    return
+                self._event.clear()
+                if self._pending or not self._running:
+                    continue  # raced with a submit()/stop() before clear()
+                await self._event.wait()
+                continue
+            if self._queued_rows >= self.r_block or not self._running:
+                self._start_batch()
+                continue
+            timeout = self._flush_at() - time.monotonic()
+            if timeout <= 0:
+                self._start_batch()
+                continue
+            self._event.clear()
+            try:
+                await asyncio.wait_for(self._event.wait(), timeout)
+            except (asyncio.TimeoutError, TimeoutError):
+                pass
+
+    def _start_batch(self) -> None:
+        """Take whole requests FIFO up to ``r_block`` rows and hand them to
+        the dispatch executor.  No await between taking and scheduling —
+        and nothing here blocks on the device — so the queue is open for
+        new ``submit()``s the moment this returns."""
+        taken: List[_Pending] = []
+        rows = 0
+        while self._pending:
+            n = len(self._pending[0].nnz)
+            if taken and rows + n > self.r_block:
+                break  # head-of-line request starts the next batch
+            req = self._pending.popleft()
+            taken.append(req)
+            rows += n
+        self._queued_rows -= rows
+        self.metrics.on_batch_start(rows)
+        task = asyncio.create_task(self._dispatch(taken, rows))
+        self._dispatches.add(task)
+        task.add_done_callback(self._dispatches.discard)
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _assemble(self, reqs: Sequence[_Pending]) -> SparseBatch:
+        """Coalesce requests into ONE padded batch of exactly ``r_block``
+        rows and a bucketed feature width (compiled-shape reuse; empty pad
+        rows are result-inert — see module docstring)."""
+        f = _bucket_up(max(r.idx.shape[1] for r in reqs), self.config.feature_bucket)
+        idx = np.full((self.r_block, f), self.dim, np.int32)
+        val = np.zeros((self.r_block, f), np.float32)
+        nnz = np.zeros(self.r_block, np.int32)
+        off = 0
+        for r in reqs:
+            n, fr = r.idx.shape
+            idx[off:off + n, :fr] = r.idx
+            val[off:off + n, :fr] = r.val
+            nnz[off:off + n] = r.nnz
+            off += n
+        return SparseBatch(indices=jnp.asarray(idx), values=jnp.asarray(val),
+                           nnz=jnp.asarray(nnz), dim=self.dim)
+
+    def _query_once(self, batch: SparseBatch):
+        """Executor-side: one store dispatch under the batch watchdog.
+        Returns (ids, scores, JoinStats, index_builds_delta) as host data."""
+        builds0 = getattr(getattr(self.store, "stats", None), "index_builds", 0)
+        res = with_timeout(self.store.query, self.config.batch_timeout_s, batch)
+        ids = np.asarray(res.ids)
+        scores = np.asarray(res.scores)
+        builds1 = getattr(getattr(self.store, "stats", None), "index_builds", 0)
+        return ids, scores, res.stats, builds1 - builds0
+
+    async def _dispatch(self, reqs: List[_Pending], rows: int) -> None:
+        loop = asyncio.get_running_loop()
+        batch = self._assemble(reqs)
+        t0 = time.monotonic()
+        delays = iter(self.config.retry.delays())
+        while True:
+            try:
+                ids, scores, stats, builds = await loop.run_in_executor(
+                    self._exec, self._query_once, batch)
+                break
+            except Exception as e:  # noqa: BLE001 — timeout/device errors
+                if isinstance(e, TimeoutError):
+                    self.metrics.timeouts += 1
+                try:
+                    delay = next(delays)
+                except StopIteration:
+                    for req in reqs:
+                        if not req.future.done():
+                            req.future.set_exception(
+                                RuntimeError(f"batch dispatch failed: {e!r}"))
+                    self.metrics.on_fail(len(reqs))
+                    return
+                self.metrics.retries += 1
+                await asyncio.sleep(delay)
+        wall = time.monotonic() - t0
+        self.metrics.on_batch(rows, wall, stats)
+        self.metrics.query_index_builds += builds
+        now = time.monotonic()
+        off = 0
+        for req in reqs:
+            n = len(req.nnz)
+            out = (ids[off:off + n, :req.k].copy(),
+                   scores[off:off + n, :req.k].copy())
+            off += n
+            if not req.future.done():
+                req.future.set_result(out)
+            self.metrics.on_complete(
+                now - req.t_submit,
+                missed_deadline=(req.t_deadline is not None
+                                 and now > req.t_deadline),
+            )

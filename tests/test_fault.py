@@ -64,3 +64,41 @@ def test_guard_finite():
         guard_finite("bad", np.float32(np.nan))
     with pytest.raises(NonRetryableError):
         guard_finite("bad", np.array([1.0, np.inf]))
+
+
+def test_retry_policy_delays_reiterable_and_exponential():
+    p = RetryPolicy(max_retries=3, backoff_s=1.0, backoff_mult=2.0)
+    d1 = p.delays()
+    assert d1 == [1.0, 2.0, 4.0]
+    assert list(d1) == list(d1)      # materialized: safe to iterate twice
+    assert p.delays() == d1          # and fresh per call
+
+
+def test_retry_policy_jitter_bounds():
+    p = RetryPolicy(max_retries=4, backoff_s=0.5, backoff_mult=3.0, jitter=0.5)
+    base = RetryPolicy(max_retries=4, backoff_s=0.5, backoff_mult=3.0).delays()
+    d = p.delays(seed=0)
+    for got, b in zip(d, base):
+        assert b <= got <= b * 1.5   # scaled by 1 + U(0, jitter)
+    assert p.delays(seed=1) != p.delays(seed=2)
+
+
+def test_with_timeout_passthrough_and_timeout():
+    from repro.runtime.fault import with_timeout
+
+    assert with_timeout(lambda a, b: a + b, None, 1, b=2) == 3
+    assert with_timeout(lambda: "ok", 5.0) == "ok"
+
+    import time as _time
+    with pytest.raises(TimeoutError, match="exceeded"):
+        with_timeout(_time.sleep, 0.02, 1.0)
+
+
+def test_with_timeout_propagates_exceptions():
+    from repro.runtime.fault import with_timeout
+
+    def boom():
+        raise ValueError("inner failure")
+
+    with pytest.raises(ValueError, match="inner failure"):
+        with_timeout(boom, 5.0)

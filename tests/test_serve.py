@@ -79,3 +79,24 @@ def test_finished_requests_tracked():
         srv.step()
     assert sorted(r.rid for r in srv.finished) == [0, 1, 2, 3, 4]
     assert all(r.done and len(r.out) == 4 for r in srv.finished)
+
+
+def test_latency_percentiles_reported():
+    """admit→finish percentiles land in the serving summary (the satellite
+    of the query-serving front-end: one percentile definition everywhere)."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    srv = Server(cfg, batch=2, max_seq=64)
+    rng = np.random.default_rng(7)
+    pending = [
+        Request(i, rng.integers(0, 256, 6).astype(np.int32), max_new=3)
+        for i in range(4)
+    ]
+    while pending or srv.occupancy():
+        while pending and srv.admit(pending[0]):
+            pending.pop(0)
+        srv.step()
+    lat = srv.latency_summary()
+    assert lat["p50_ms"] is not None and lat["p50_ms"] >= 0
+    assert lat["p99_ms"] >= lat["p50_ms"]
+    for r in srv.finished:
+        assert r.t_finish >= r.t_admit
