@@ -1,13 +1,14 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test smoke serve-smoke bench bench-compare
+.PHONY: check test smoke serve-smoke crash-smoke bench bench-compare
 
 # tier-1 verify + engine/store smoke (index reuse + dispatch shape on CPU;
 # the multi-device store suite — tests/test_store.py, tests/test_distributed.py
 # — runs inside `test` via subprocesses that force virtual CPU devices)
 # + serving smoke (continuous-batching scheduler over the 4-shard store)
-check: test smoke serve-smoke
+# + crash smoke (kill -9 mid-save → warm restart → bit-parity)
+check: test smoke serve-smoke crash-smoke
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -23,14 +24,25 @@ serve-smoke:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 	$(PYTHON) -m benchmarks.serve_load --smoke
 
+# crash consistency on a 4-shard fan-out: a child process is SIGKILLed
+# mid-incremental-save (torn tmp, no manifest); warm restart must resolve
+# the newest committed step and bit-match an unkilled twin, per algorithm
+crash-smoke:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+	$(PYTHON) -m benchmarks.crash_smoke
+
 # machine-readable perf record for the PR trajectory (BENCH_*.json);
 # store streams record per-shard dispatch/sync counts on a 4-shard fan-out,
-# the serving stream records the open-loop scheduler load test
+# the serving stream records the open-loop scheduler load test, and the
+# serving_faulted stream records the shard-loss fault-injection run
+# (zero lost futures, degraded service, recovery time, post-recovery parity)
 bench:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
-	$(PYTHON) -m benchmarks.run --fast --out BENCH_PR6.json
+	$(PYTHON) -m benchmarks.run --fast --out BENCH_PR7.json
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
-	$(PYTHON) -m benchmarks.serve_load --fast --merge BENCH_PR6.json
+	$(PYTHON) -m benchmarks.serve_load --fast --merge BENCH_PR7.json
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+	$(PYTHON) -m benchmarks.serve_load --fault-plan --merge BENCH_PR7.json
 
 # fail if any algorithm regressed its dispatch/sync/index-build shape vs the
 # previous BENCH_*.json record (wall times are informational only)

@@ -15,7 +15,10 @@ dispatch/sync/build counters are machine-independent.  The ``serving``
 stream (the open-loop load bench) gates separately — absolute bars
 (batched ≥ 3x serial queries/sec, zero query-time builds, bit-parity)
 plus wide relative bands on p99 / queries-per-sec / dispatches-per-
-request once two records carry it.  Exit code 1 on any regression —
+request once two records carry it.  The ``serving_faulted`` stream
+(``serve_load --fault-plan``) gates on absolute fault-tolerance bars:
+zero lost futures under an injected shard loss, recovery completed,
+post-recovery bit-parity.  Exit code 1 on any regression —
 ``make bench-compare`` wires this into CI.
 """
 from __future__ import annotations
@@ -92,6 +95,34 @@ def compare_serving(ns: dict, os_: dict, rows: list, failures: list) -> None:
             failures.append(f"serving.{metric}: {new_v} > {bound}")
 
 
+def compare_serving_faulted(ns: dict, rows: list, failures: list) -> None:
+    """Gate the fault-injection serving stream (``serve_load --fault-plan``).
+
+    All bars are absolute (they hold on any machine): the injected shard
+    loss must actually fire, the scheduler must complete EVERY submitted
+    future (degraded or recovered — zero lost futures), the shard must
+    rebuild from its checkpoint slice, and post-recovery results must be
+    bit-identical to direct queries with zero query-time index builds.
+    """
+    absolute = {
+        "zero_lost_futures": (ns.get("completed") == ns.get("requests")
+                              and ns.get("failed") == 0),
+        "fault_fired": ns.get("shard_losses", 0) >= 1,
+        "served_degraded": ns.get("degraded", 0) > 0,
+        "recovered": (ns.get("recoveries", 0) >= 1
+                      and bool(ns.get("recovered_all"))),
+        "parity_after_recovery": bool(ns.get("parity_after_recovery")),
+        "query_index_builds==0": ns.get("query_index_builds") == 0,
+    }
+    for label, ok in absolute.items():
+        rows.append(f"  {'serving_faulted':12s} {label:28s} "
+                    f"{'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(f"serving_faulted.{label}")
+    rows.append(f"  {'serving_faulted':12s} {'recovery_s (info)':28s} "
+                f"{ns.get('recovery_s')}")
+
+
 def compare(old_path: str, new_path: str) -> int:
     old, new = _load(old_path), _load(new_path)
     failures = []
@@ -99,6 +130,9 @@ def compare(old_path: str, new_path: str) -> int:
     for name, ns in new.get("streams", {}).items():
         if name == "serving":
             compare_serving(ns, old.get("streams", {}).get(name), rows, failures)
+            continue
+        if name == "serving_faulted":
+            compare_serving_faulted(ns, rows, failures)
             continue
         os_ = old.get("streams", {}).get(name)
         if os_ is None:

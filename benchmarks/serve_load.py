@@ -18,7 +18,16 @@ bench records:
   * the dispatch shape: device dispatches per request and query-time
     index builds (must be 0 — build-once is the store's contract).
 
-  PYTHONPATH=src python -m benchmarks.serve_load --fast --merge BENCH_PR6.json
+With ``--fault-plan`` the bench instead records the ``serving_faulted``
+stream: the same open loop, but a :class:`FaultPlan` kills shard 0
+mid-traffic.  The scheduler (``allow_partial=True`` + a ``recover``
+hook) must complete EVERY in-flight future — degraded (flagged with the
+missing shard set) or full after recovery, never dropped — and results
+must return to bit-parity with direct queries once the shard rebuilds
+from its checkpoint slice.
+
+  PYTHONPATH=src python -m benchmarks.serve_load --fast --merge BENCH_PR7.json
+  PYTHONPATH=src python -m benchmarks.serve_load --fault-plan --merge BENCH_PR7.json
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
       PYTHONPATH=src python -m benchmarks.serve_load --smoke
 """
@@ -27,7 +36,9 @@ from __future__ import annotations
 import argparse
 import asyncio
 import json
+import shutil
 import sys
+import tempfile
 import time
 
 import numpy as np
@@ -229,6 +240,116 @@ def run(n_requests: int, rate: float, n_store: int, dim: int, nnz: int,
     return record
 
 
+def run_faulted(n_requests: int, rate: float, n_store: int, dim: int,
+                nnz: int, k: int, r_block: int, s_block: int, window_s: float,
+                seed: int, fault_at: int, algorithm: str = "iib"):
+    """Open loop with an injected shard loss at dispatch ``fault_at``.
+
+    The acceptance bar is ZERO LOST FUTURES: every submitted request
+    resolves — degraded while the shard is down, full once the
+    background recovery (rebuild from the checkpoint slice) lands — and
+    a post-recovery sample is bit-identical to direct queries.
+    """
+    import jax
+
+    from repro.runtime.fault import FaultPlan, FaultSpec
+
+    S = synthetic_sparse(n_store, dim=dim, nnz_mean=nnz, seed=seed)
+    spec = JoinSpec(k=k, algorithm=algorithm, r_block=r_block, s_block=s_block)
+    store = ShardedKNNStore.build(S, spec)
+    ckpt_dir = tempfile.mkdtemp(prefix="serve_fault_ckpt_")
+    try:
+        store.save(ckpt_dir)
+        pool, bounds, arrivals, ks = make_workload(
+            n_requests, rate, max_rows=4, k=k, dim=dim, nnz=nnz, seed=seed)
+        config = ServeConfig(
+            r_block=r_block, window_s=window_s,
+            queue_rows_hwm=4 * max(n_requests * 4, r_block),
+            allow_partial=True,
+            recover=lambda: store.recover(ckpt_dir),
+        )
+
+        # warm the compiled batch shape BEFORE arming the fault, so the
+        # plan's dispatch counter starts at the timed traffic
+        async def warm():
+            async with KNNScheduler(store, config) as sched:
+                await asyncio.gather(*[
+                    sched.submit(slice_rows(pool, i, i + 1))
+                    for i in range(r_block)
+                ])
+
+        asyncio.run(warm())
+        store.fault_plan = FaultPlan(
+            [FaultSpec("shard_error", shard=0, at_dispatch=fault_at)])
+        lat, done_at, wall, bounces, metrics = asyncio.run(
+            open_loop(store, pool, bounds, arrivals, ks, config))
+        store.fault_plan = None
+        summary = metrics.summary()
+        faults = summary["faults"]
+
+        # the scheduler's drain awaited the background recovery; the
+        # store must be whole again and back at bit-parity
+        sample_n = min(16, n_requests)
+
+        async def reserve():
+            out = {}
+            async with KNNScheduler(store, config) as sched:
+                idxs = np.linspace(0, n_requests - 1, num=sample_n, dtype=int)
+                outs = await asyncio.gather(*[
+                    sched.submit(
+                        slice_rows(pool, int(bounds[i]), int(bounds[i + 1])),
+                        k=int(ks[i]))
+                    for i in idxs
+                ])
+                for i, o in zip(idxs, outs):
+                    out[int(i)] = o
+            return out
+
+        sampled = asyncio.run(reserve())
+        parity = parity_sample(
+            store, pool, bounds, ks, lambda i: sampled[i], sample_n)
+
+        record = {
+            "algorithm": algorithm,
+            "requests": n_requests,
+            "completed": summary["requests"]["completed"],
+            "failed": summary["requests"]["failed"],
+            "rejected_bounces": bounces,
+            "degraded": faults["degraded"],
+            "shard_losses": faults["shard_losses"],
+            "recoveries": faults["recoveries"],
+            "recovery_s": faults["recovery_s"],
+            "recovered_all": store.lost_shards == (),
+            "parity_after_recovery": parity,
+            "query_index_builds": summary["dispatch"]["query_index_builds"],
+            "fault": {"kind": "shard_error", "shard": 0,
+                      "at_dispatch": fault_at},
+            "wall_s": round(wall, 4),
+            "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+            "shards": store.n_shards,
+            "device_count": jax.device_count(),
+        }
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    return record
+
+
+def faulted_checks(record: dict) -> dict:
+    return {
+        # zero lost futures: every submitted request resolved, none errored
+        "zero_lost_futures_ok": (
+            record["completed"] == record["requests"]
+            and record["failed"] == 0),
+        "fault_fired_ok": record["shard_losses"] >= 1,
+        "served_degraded_ok": record["degraded"] > 0,
+        "recovered_ok": (record["recoveries"] >= 1
+                         and record["recovered_all"]),
+        "parity_after_recovery_ok": bool(record["parity_after_recovery"]),
+        "zero_query_builds_ok": record["query_index_builds"] == 0,
+    }
+
+
 def smoke() -> int:
     """CI gate (``make serve-smoke``): tiny load under forced virtual
     devices.  Every submitted request must complete, results must be
@@ -255,6 +376,12 @@ def main(argv=None):
                     help="tiny CI load: completed == submitted, zero "
                          "query-time builds, bit-parity (exit 1 on failure)")
     ap.add_argument("--fast", action="store_true", help="CI-sized record run")
+    ap.add_argument("--fault-plan", action="store_true",
+                    help="record the 'serving_faulted' stream: inject a "
+                         "shard loss mid-traffic; every future must "
+                         "complete (degraded or recovered, never dropped)")
+    ap.add_argument("--fault-at", type=int, default=2,
+                    help="store dispatch index the shard loss fires at")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--rate", type=float, default=None,
                     help="Poisson arrival rate (requests/s)")
@@ -267,6 +394,28 @@ def main(argv=None):
 
     if args.smoke:
         return smoke()
+
+    if args.fault_plan:
+        record = run_faulted(
+            n_requests=args.requests or 256, rate=(args.requests or 256) / 0.2,
+            n_store=512, dim=2048, nnz=32, k=5, r_block=64, s_block=128,
+            window_s=0.002, seed=args.seed, fault_at=args.fault_at)
+        checks = faulted_checks(record)
+        print(json.dumps({"serving_faulted": record, **checks}, indent=1))
+        if args.merge:
+            with open(args.merge) as f:
+                doc = json.load(f)
+            doc.setdefault("streams", {})["serving_faulted"] = record
+            with open(args.merge, "w") as f:
+                json.dump(doc, f, indent=1)
+                f.write("\n")
+            print(f"merged serving_faulted stream into {args.merge}")
+        elif args.out:
+            with open(args.out, "w") as f:
+                json.dump({"streams": {"serving_faulted": record}}, f, indent=1)
+                f.write("\n")
+            print(f"wrote {args.out}")
+        return 0 if all(checks.values()) else 1
 
     n_requests = args.requests or (2000 if args.fast else 4000)
     # arrivals must outpace service so in-flight climbs past 1k (open loop)

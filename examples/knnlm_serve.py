@@ -20,11 +20,22 @@ This is the showcase for the serving stack (DESIGN.md §7 + §8):
   (hidden-state key → next token) pair is ``add()``-ed back with a TTL,
   expired entries are tombstoned per step, and ``delete()`` evicts ids —
   all through ``scheduler.mutate()``, serialized with batch dispatches,
-  with zero index rebuilds at query time.
+  with zero index rebuilds at query time;
+* with ``--ckpt DIR`` the store checkpoints incrementally while serving
+  (``save_dirty`` through ``mutate()`` — only mutated shards rewrite, the
+  id→token value map rides in the manifest), and ``--resume`` is the
+  kill-9 story: warm-restart the datastore from the newest valid commit
+  (``ShardedKNNStore.load``) and keep answering with the SAME global ids
+  — no index rebuild, no id reshuffle (DESIGN.md §9).
 
   PYTHONPATH=src python examples/knnlm_serve.py
+  PYTHONPATH=src python examples/knnlm_serve.py --ckpt /tmp/knnlm.ckpt
+  # kill -9 it mid-run, then:
+  PYTHONPATH=src python examples/knnlm_serve.py --ckpt /tmp/knnlm.ckpt --resume
 """
+import argparse
 import asyncio
+import time
 
 import numpy as np
 import jax
@@ -51,7 +62,7 @@ def sparsify(h: np.ndarray, keep: int = 32) -> SparseBatch:
     )
 
 
-async def main_async():
+async def main_async(ckpt: str = None, resume: bool = False):
     cfg = get_config("qwen3-0.6b").reduced()
     srv = Server(cfg, batch=1, max_seq=64, seed=0)
     rng = np.random.default_rng(0)
@@ -66,11 +77,25 @@ async def main_async():
     datastore = sparsify(keys)
 
     lam, k = 0.3, 8
-    # build the sharded datastore ONCE (every local device holds one shard
-    # of S); all traffic below flows through the scheduler's batches
-    store = ShardedKNNStore.build(
-        datastore, JoinSpec(k=k, algorithm="iib", r_block=8))
-    values = list(values)           # grows with the datastore
+    if resume:
+        # kill-9 → warm restart: host mirrors + id stacks + tombstone state
+        # come off disk, device stacks rebuild, global ids are STABLE — the
+        # persisted id→token value map lines up with the restored id space
+        t_load = time.perf_counter()
+        store = ShardedKNNStore.load(ckpt)
+        values = [int(v) for v in store.loaded_extra["knnlm_values"]]
+        assert len(values) == store._next_gid, "value map / id space mismatch"
+        print(f"resumed:   {store.num_vectors} live rows over "
+              f"{store.n_shards} shard(s) in "
+              f"{time.perf_counter() - t_load:.2f}s (ids stable)")
+    else:
+        # build the sharded datastore ONCE (every local device holds one
+        # shard of S); all traffic below flows through the scheduler
+        store = ShardedKNNStore.build(
+            datastore, JoinSpec(k=k, algorithm="iib", r_block=8))
+        values = [int(v) for v in values]   # grows with the datastore
+        if ckpt:
+            store.save(ckpt, extra={"knnlm_values": values})
     ttl_steps = 6                   # generated entries live this many steps
 
     # simulated concurrent users: perturbed datastore keys as 1-row queries
@@ -135,6 +160,11 @@ async def main_async():
             values.append(nxt)
             assert len(values) == int(new_gids[-1]) + 1
             await sched.mutate(store.expire, float(step))
+            if ckpt:
+                # incremental commit, serialized with dispatches: only the
+                # shards this step's add/expire touched are rewritten
+                await sched.mutate(
+                    store.save_dirty, ckpt, {"knnlm_values": values})
             step += 1
 
             if len(req.out) >= req.max_new:
@@ -142,6 +172,9 @@ async def main_async():
 
         # explicit eviction: drop the two lowest-id seed entries
         await sched.mutate(store.delete, [0, 1])
+        if ckpt:
+            await sched.mutate(
+                store.save_dirty, ckpt, {"knnlm_values": values})
         builds_before = store.stats.index_builds
         await sched.submit(query, k=k)
         assert store.stats.index_builds == builds_before, "query rebuilt an index!"
@@ -165,8 +198,18 @@ async def main_async():
           f"p99 {lat['p99_ms']}ms")
 
 
-def main():
-    asyncio.run(main_async())
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint dir: save on build + incrementally "
+                         "while serving")
+    ap.add_argument("--resume", action="store_true",
+                    help="warm-restart the datastore from --ckpt instead "
+                         "of building it")
+    args = ap.parse_args(argv)
+    if args.resume and not args.ckpt:
+        ap.error("--resume requires --ckpt")
+    asyncio.run(main_async(ckpt=args.ckpt, resume=args.resume))
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 from repro.checkpoint.ckpt import (  # noqa: F401
     CheckpointManager,
     latest_step,
+    load_arrays,
     restore,
     save,
 )

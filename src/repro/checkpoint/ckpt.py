@@ -28,12 +28,16 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import re
 import shutil
 import threading
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+_STEP_RE = re.compile(r"step_(\d+)$")
+_OLD_RE = re.compile(r"step_(\d+)\.old-\d+$")
 
 
 def _leaf_paths(tree) -> List[Tuple[str, Any]]:
@@ -49,8 +53,22 @@ def _sha(path: str) -> str:
     return h.hexdigest()
 
 
-def save(directory: str, step: int, tree, extra: Optional[dict] = None) -> str:
-    """Synchronous atomic save. Returns the committed path."""
+def save(
+    directory: str,
+    step: int,
+    tree,
+    extra: Optional[dict] = None,
+    link_from: Optional[str] = None,
+    link_paths: Optional[set] = None,
+) -> str:
+    """Synchronous atomic save. Returns the committed path.
+
+    ``link_from`` enables incremental saves: leaves whose pytree path is in
+    ``link_paths`` are hard-linked from that previously committed checkpoint
+    dir instead of re-serialized (manifest entries are reused, so the sha
+    stays correct without re-hashing).  Falls back to a full write for any
+    leaf that can't be linked (missing in the old manifest, link failure).
+    """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + f".tmp-{os.getpid()}"
@@ -58,21 +76,39 @@ def save(directory: str, step: int, tree, extra: Optional[dict] = None) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
 
+    link_manifest: Dict[str, dict] = {}
+    if link_from is not None and link_paths:
+        try:
+            with open(os.path.join(link_from, "manifest.json")) as f:
+                link_manifest = {e["path"]: e for e in json.load(f)["leaves"]}
+        except (OSError, json.JSONDecodeError, KeyError):
+            link_manifest = {}
+
     leaves = _leaf_paths(tree)
     manifest = {"step": step, "extra": extra or {}, "leaves": []}
     for i, (path, leaf) in enumerate(leaves):
         fname = f"leaf_{i:05d}.npy"
-        arr = np.asarray(jax.device_get(leaf))
-        np.save(os.path.join(tmp, fname), arr)
-        manifest["leaves"].append(
-            {
+        dst = os.path.join(tmp, fname)
+        entry = None
+        if link_paths and path in link_paths and path in link_manifest:
+            src_entry = link_manifest[path]
+            src = os.path.join(link_from, src_entry["file"])
+            try:
+                os.link(src, dst)
+                entry = dict(src_entry, file=fname)
+            except OSError:
+                entry = None  # cross-device or missing: fall through to write
+        if entry is None:
+            arr = np.asarray(jax.device_get(leaf))
+            np.save(dst, arr)
+            entry = {
                 "path": path,
                 "file": fname,
                 "shape": list(arr.shape),
                 "dtype": str(arr.dtype),
-                "sha": _sha(os.path.join(tmp, fname)),
+                "sha": _sha(dst),
             }
-        )
+        manifest["leaves"].append(entry)
     mpath = os.path.join(tmp, "manifest.json")
     with open(mpath, "w") as f:
         json.dump(manifest, f)
@@ -82,9 +118,20 @@ def save(directory: str, step: int, tree, extra: Optional[dict] = None) -> str:
     dfd = os.open(tmp, os.O_RDONLY)
     os.fsync(dfd)
     os.close(dfd)
+    # Never rmtree the live checkpoint before the new one is published: a
+    # crash between rmtree and rename would leave NO valid checkpoint.  Move
+    # the old dir aside, publish, then delete the old one; a crash anywhere
+    # in this window leaves at least one valid copy (restore adopts orphaned
+    # ``.old-`` dirs whose step went missing).
+    old = None
     if os.path.exists(final):
-        shutil.rmtree(final)
+        old = final + f".old-{os.getpid()}"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(final, old)
     os.rename(tmp, final)
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
     return final
 
 
@@ -104,19 +151,42 @@ def _valid(ckpt_dir: str) -> bool:
         return False
 
 
+def _committed_steps(directory: str) -> List[int]:
+    """Step numbers of committed (non-tmp, non-old) dirs, ignoring any
+    ``step_*`` name that isn't exactly ``step_<digits>`` (stray files,
+    hand-made dirs, editor droppings)."""
+    out = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.fullmatch(name)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def _adopt_orphans(directory: str) -> None:
+    """Recover ``step_N.old-<pid>`` dirs orphaned by a crash mid-publish.
+
+    ``save`` renames the previous committed ``step_N`` aside before
+    publishing the replacement; if the process dies in that window the only
+    valid copy of step N is the ``.old-`` dir.  Rename it back so restore
+    sees it — unless a committed ``step_N`` already exists (normal case:
+    the aside dir is just pre-delete garbage)."""
+    for name in os.listdir(directory):
+        m = _OLD_RE.fullmatch(name)
+        if not m:
+            continue
+        final = os.path.join(directory, f"step_{int(m.group(1)):08d}")
+        src = os.path.join(directory, name)
+        if not os.path.exists(final) and _valid(src):
+            os.rename(src, final)
+
+
 def latest_step(directory: str) -> Optional[int]:
     """Newest step with a VALID (manifest-verified) checkpoint, else None."""
     if not os.path.isdir(directory):
         return None
-    steps = sorted(
-        (
-            int(name.split("_")[1])
-            for name in os.listdir(directory)
-            if name.startswith("step_") and ".tmp" not in name
-        ),
-        reverse=True,
-    )
-    for s in steps:
+    _adopt_orphans(directory)
+    for s in reversed(_committed_steps(directory)):
         if _valid(os.path.join(directory, f"step_{s:08d}")):
             return s
     return None
@@ -157,6 +227,34 @@ def restore(
     return tree, manifest.get("extra", {})
 
 
+def load_arrays(
+    directory: str,
+    step: int,
+    prefix: Optional[str] = None,
+    verify: bool = True,
+) -> Tuple[Dict[str, np.ndarray], dict]:
+    """Load leaves by pytree path without a ``like`` tree.
+
+    Returns ``({keystr_path: np.ndarray}, extra)``.  ``prefix`` filters to
+    leaves whose path starts with it — the shard-slice recovery read: a
+    lost shard's arrays are fetched without touching the other shards'
+    (possibly large) leaf files.  ``verify`` sha-checks each loaded leaf
+    and raises ``ValueError`` on mismatch (corrupt-leaf detection).
+    """
+    ckpt_dir = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    out: Dict[str, np.ndarray] = {}
+    for entry in manifest["leaves"]:
+        if prefix is not None and not entry["path"].startswith(prefix):
+            continue
+        fp = os.path.join(ckpt_dir, entry["file"])
+        if verify and _sha(fp) != entry["sha"]:
+            raise ValueError(f"corrupt checkpoint leaf {entry['path']} ({fp})")
+        out[entry["path"]] = np.load(fp)
+    return out, manifest.get("extra", {})
+
+
 class CheckpointManager:
     """Keep-last-N manager with async commit and tmp-dir garbage collection."""
 
@@ -168,16 +266,13 @@ class CheckpointManager:
         self._gc_tmp()
 
     def _gc_tmp(self):
+        _adopt_orphans(self.directory)  # rescue before sweeping
         for name in os.listdir(self.directory):
-            if ".tmp-" in name:
+            if ".tmp-" in name or _OLD_RE.fullmatch(name):
                 shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)
 
     def _gc_old(self):
-        steps = sorted(
-            int(n.split("_")[1])
-            for n in os.listdir(self.directory)
-            if n.startswith("step_") and ".tmp" not in n
-        )
+        steps = _committed_steps(self.directory)
         for s in steps[: -self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)
 

@@ -226,11 +226,16 @@ def plan(
 
 @dataclasses.dataclass
 class JoinResult:
-    """One query's output: (n_r, k) global-S neighbours plus work stats."""
+    """One query's output: (n_r, k) global-S neighbours plus work stats.
+
+    ``missing_shards`` is non-empty only for degraded sharded-store queries
+    (``allow_partial=True`` with shards lost): the result is exact over the
+    surviving shards and excludes the listed ones entirely."""
 
     scores: jax.Array
     ids: jax.Array
     stats: JoinStats
+    missing_shards: Tuple[int, ...] = ()
 
     @property
     def state(self) -> TopKState:

@@ -147,6 +147,8 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--step-timeout", type=float, default=None,
+                    help="per-decode-step watchdog in seconds (one retry)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -160,12 +162,24 @@ def main(argv=None):
     )
     srv = Server(cfg, args.batch, args.max_seq)
 
+    from repro.runtime.fault import with_timeout
+
     t0 = time.time()
     steps = 0
+    rejected = 0        # admission bounces: a pending request found no slot
+    timeouts = 0        # step watchdog firings
+    retries = 0         # steps re-driven after a watchdog firing
     while pending or srv.occupancy():
         while pending and srv.admit(pending[0]):
             pending.popleft()
-        srv.step()
+        if pending:
+            rejected += 1
+        try:
+            with_timeout(srv.step, args.step_timeout)
+        except TimeoutError:
+            timeouts += 1
+            retries += 1
+            with_timeout(srv.step, args.step_timeout)  # one retry, then raise
         steps += 1
         if steps > 10_000:
             raise RuntimeError("serving loop did not converge")
@@ -180,6 +194,13 @@ def main(argv=None):
         "total_tokens": total_tokens,
         "tokens_per_request": tokens_per_request,
         "latency_ms": srv.latency_summary(),
+        # failure-path counters: same section shape as the query-serving
+        # front-end's metrics summary (repro.serve.metrics -> "faults"),
+        # so benches assert one schema across both serving stacks
+        "faults": {
+            "rejected": rejected, "timeouts": timeouts,
+            "retries": retries, "degraded": 0,
+        },
     }))
     return 0
 

@@ -1,1 +1,8 @@
-from repro.runtime.fault import Supervisor, RetryPolicy  # noqa: F401
+from repro.runtime.fault import (  # noqa: F401
+    FaultPlan,
+    FaultSpec,
+    RetryPolicy,
+    ShardLostError,
+    Supervisor,
+    corrupt_checkpoint_leaf,
+)

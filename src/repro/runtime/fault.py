@@ -44,6 +44,16 @@ class NonRetryableError(RuntimeError):
     pass
 
 
+class ShardLostError(RuntimeError):
+    """A store shard failed mid-dispatch.  Carries the shard index so the
+    store/scheduler can mark exactly that shard lost and either serve
+    degraded (``allow_partial``) or rebuild it from its checkpoint slice."""
+
+    def __init__(self, shard: int, message: Optional[str] = None):
+        super().__init__(message or f"shard {shard} lost")
+        self.shard = shard
+
+
 def guard_finite(name: str, value) -> None:
     v = np.asarray(jax.device_get(value))
     if not np.all(np.isfinite(v)):
@@ -107,6 +117,95 @@ def with_timeout(fn: Callable, timeout_s: Optional[float], *args, **kwargs):
     return box.get("value")
 
 
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One injected fault.
+
+    kind:
+      * ``"shard_error"`` — raise :class:`ShardLostError` (for ``shard``)
+        when the store's dispatch counter reaches ``at_dispatch``;
+      * ``"wedge"`` — sleep ``wedge_s`` inside the dispatch at
+        ``at_dispatch`` (drives the caller's ``with_timeout`` watchdog);
+      * ``"corrupt_leaf"`` — not dispatched-triggered; use
+        :func:`corrupt_checkpoint_leaf` directly (kept here so a plan can
+        be described declaratively in benches).
+    Each spec fires at most once.
+    """
+
+    kind: str
+    at_dispatch: int = 0
+    shard: int = 0
+    wedge_s: float = 0.0
+    path: Optional[str] = None
+
+    def __post_init__(self):
+        if self.kind not in ("shard_error", "wedge", "corrupt_leaf"):
+            raise ValueError(f"unknown fault kind: {self.kind!r}")
+
+
+class FaultPlan:
+    """A scripted set of faults a store consults on every device dispatch.
+
+    Attach via ``store.fault_plan = FaultPlan([...])``; the store calls
+    :meth:`on_dispatch` immediately before each fan-out.  Deterministic —
+    tests and benches replay identical fault sequences.
+    """
+
+    def __init__(self, specs):
+        self.specs = list(specs)
+        self.dispatches = 0
+        self.fired: list = []
+
+    def on_dispatch(self) -> None:
+        n = self.dispatches
+        self.dispatches += 1
+        for spec in self.specs:
+            if spec in self.fired or spec.at_dispatch != n:
+                continue
+            if spec.kind == "shard_error":
+                self.fired.append(spec)
+                raise ShardLostError(spec.shard, f"injected at dispatch {n}")
+            if spec.kind == "wedge":
+                self.fired.append(spec)
+                time.sleep(spec.wedge_s)
+
+
+def corrupt_checkpoint_leaf(directory: str, step: Optional[int] = None,
+                            leaf: int = 0) -> str:
+    """Flip bytes in one committed leaf file (fault injection for restore
+    paths).  Returns the corrupted file's path.  ``step`` defaults to the
+    newest committed step; ``leaf`` indexes into the manifest order."""
+    import json
+    import os
+
+    from repro.checkpoint import ckpt as _ckpt
+
+    if step is None:
+        step = _ckpt.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    ckpt_dir = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    fp = os.path.join(ckpt_dir, manifest["leaves"][leaf]["file"])
+    # Copy-on-write: incremental saves hard-link unchanged leaves across
+    # steps, and in-place writes would corrupt every step sharing the inode
+    # (defeating the fall-back-to-previous-step path under test).
+    with open(fp, "rb") as f:
+        data = bytearray(f.read())
+    mid = max(0, len(data) // 2)
+    data[mid:mid + 4] = b"\xde\xad\xbe\xef"
+    os.unlink(fp)
+    with open(fp, "wb") as f:
+        f.write(bytes(data))
+    return fp
+
+
 class _Watchdog:
     """Raises in the main thread flow by flagging; checked between steps."""
 
@@ -157,7 +256,10 @@ class Supervisor:
 
     def run(self, start_step: int, num_steps: int) -> int:
         step = start_step
-        delays = iter(self.policy.delays())
+        # The retry budget is per-INCIDENT, not per-run: a successful step
+        # resets it, so two unrelated failures hours apart each get the
+        # full backoff schedule instead of exhausting a shared global one.
+        delays = None
         while step < num_steps:
             try:
                 self.watchdog.arm()
@@ -166,10 +268,13 @@ class Supervisor:
                 if self.on_metrics is not None:
                     self.on_metrics(step, metrics)
                 step += 1
+                delays = None
             except NonRetryableError:
                 raise
             except Exception as e:  # noqa: BLE001 — device/runtime errors
                 self.failures += 1
+                if delays is None:
+                    delays = iter(self.policy.delays())
                 try:
                     delay = next(delays)
                 except StopIteration:

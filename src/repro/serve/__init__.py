@@ -9,16 +9,24 @@
                  + retry policy, batch geometry.
   ServeMetrics — rolling p50/p99 latency, queue depth, batch occupancy,
                  queries/sec, store dispatch counters.
+  ServeResult  — the ``(ids, scores)`` pair ``submit`` resolves to,
+                 carrying ``missing_shards`` when served degraded.
   QueueFull    — admission-control bounce carrying ``retry_after_s``.
 """
 from repro.serve.metrics import RollingWindow, ServeMetrics, percentiles
-from repro.serve.scheduler import KNNScheduler, QueueFull, ServeConfig
+from repro.serve.scheduler import (
+    KNNScheduler,
+    QueueFull,
+    ServeConfig,
+    ServeResult,
+)
 
 __all__ = [
     "KNNScheduler",
     "QueueFull",
     "RollingWindow",
     "ServeConfig",
+    "ServeResult",
     "ServeMetrics",
     "percentiles",
 ]

@@ -78,6 +78,12 @@ class ServeMetrics:
     retries: int = 0                 # batch dispatch retries
     timeouts: int = 0                # batch watchdog firings
 
+    # failure-path counters (the fault bench's schema)
+    degraded: int = 0                # requests answered with shards missing
+    shard_losses: int = 0            # ShardLostError observations
+    recoveries: int = 0              # shard recoveries completed
+    recovery_s: float = 0.0          # total wall time spent recovering
+
     # store dispatch counters (summed JoinStats of every batch query)
     device_dispatches: int = 0
     host_syncs: int = 0
@@ -139,6 +145,17 @@ class ServeMetrics:
         self.failed += n_requests
         self.inflight -= n_requests
 
+    def on_degraded(self, n_requests: int) -> None:
+        """Requests delivered from a partial fan-out (shards missing)."""
+        self.degraded += n_requests
+
+    def on_shard_lost(self) -> None:
+        self.shard_losses += 1
+
+    def on_recovery(self, wall_s: float) -> None:
+        self.recoveries += 1
+        self.recovery_s += wall_s
+
     # -- reporting -----------------------------------------------------------
 
     @property
@@ -183,6 +200,16 @@ class ServeMetrics:
             "queue": {
                 "depth": self.queue_depth,
                 "depth_peak": self.queue_depth_peak,
+            },
+            "faults": {
+                "timeouts": self.timeouts,
+                "retries": self.retries,
+                "rejected": self.rejected,
+                "failed": self.failed,
+                "degraded": self.degraded,
+                "shard_losses": self.shard_losses,
+                "recoveries": self.recoveries,
+                "recovery_s": round(self.recovery_s, 4),
             },
             "dispatch": {
                 "device_dispatches": self.device_dispatches,

@@ -68,7 +68,7 @@ from typing import Any, Callable, Deque, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.runtime.fault import RetryPolicy, with_timeout
+from repro.runtime.fault import RetryPolicy, ShardLostError, with_timeout
 from repro.serve.metrics import ServeMetrics
 from repro.sparse.format import SparseBatch
 
@@ -80,6 +80,24 @@ class QueueFull(RuntimeError):
         super().__init__(f"serve queue over high-water mark; "
                          f"retry after {retry_after_s:.3f}s")
         self.retry_after_s = retry_after_s
+
+
+class ServeResult(tuple):
+    """``(ids, scores)`` — unpacks exactly like the plain tuple ``submit``
+    has always resolved to — plus degraded-mode metadata: ``missing_shards``
+    names the store shards absent from this answer (empty for a full
+    fan-out; see DESIGN.md §9)."""
+
+    missing_shards: Tuple[int, ...]
+
+    def __new__(cls, ids, scores, missing_shards: Tuple[int, ...] = ()):
+        self = super().__new__(cls, (ids, scores))
+        self.missing_shards = tuple(missing_shards)
+        return self
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.missing_shards)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +118,15 @@ class ServeConfig:
     ``feature_bucket`` — batch feature width is bucketed up to a multiple
                       of this so compiled shapes are reused (8 keeps the
                       variant count tiny without much pad waste).
+    ``allow_partial`` — shard-loss policy (sharded stores only): serve
+                      DEGRADED results immediately (flagged with the
+                      missing shard set) while recovery runs in the
+                      background, instead of queueing behind it.
+    ``recover``     — zero-arg callable that rebuilds lost shards (e.g.
+                      ``lambda: store.recover(ckpt_dir)``).  With
+                      ``allow_partial`` it runs in the background; without
+                      it, batches that hit a lost shard await it and then
+                      re-dispatch for FULL results (queued-behind-recovery).
     """
 
     r_block: Optional[int] = None
@@ -112,6 +139,8 @@ class ServeConfig:
                                             backoff_mult=2.0, jitter=0.25)
     )
     feature_bucket: int = 8
+    allow_partial: bool = False
+    recover: Optional[Callable[[], Any]] = None
 
 
 @dataclasses.dataclass
@@ -171,6 +200,8 @@ class KNNScheduler:
         self._flusher: Optional[asyncio.Task] = None
         self._dispatches: set = set()
         self._exec: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        self._recovering: Optional[asyncio.Task] = None
+        self._seen_lost: set = set()
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -233,8 +264,8 @@ class KNNScheduler:
             raise ValueError(f"dim mismatch: store has {self.dim}, got {rows.dim}")
         n = rows.num_vectors
         if n == 0:
-            return (np.empty((0, k or self.k_max), np.int32),
-                    np.empty((0, k or self.k_max), np.float32))
+            return ServeResult(np.empty((0, k or self.k_max), np.int32),
+                               np.empty((0, k or self.k_max), np.float32))
         if n > self.r_block:
             raise ValueError(
                 f"request has {n} rows > r_block={self.r_block}; pre-chunk it")
@@ -355,47 +386,109 @@ class KNNScheduler:
 
     def _query_once(self, batch: SparseBatch):
         """Executor-side: one store dispatch under the batch watchdog.
-        Returns (ids, scores, JoinStats, index_builds_delta) as host data."""
+        Returns (ids, scores, JoinStats, index_builds_delta, missing_shards)
+        as host data."""
         builds0 = getattr(getattr(self.store, "stats", None), "index_builds", 0)
-        res = with_timeout(self.store.query, self.config.batch_timeout_s, batch)
+        kw = {}
+        if self.config.allow_partial and hasattr(self.store, "lost_shards"):
+            kw["allow_partial"] = True
+        res = with_timeout(
+            self.store.query, self.config.batch_timeout_s, batch, **kw)
         ids = np.asarray(res.ids)
         scores = np.asarray(res.scores)
         builds1 = getattr(getattr(self.store, "stats", None), "index_builds", 0)
-        return ids, scores, res.stats, builds1 - builds0
+        missing = tuple(getattr(res, "missing_shards", ()))
+        return ids, scores, res.stats, builds1 - builds0, missing
+
+    def _kick_recovery(self) -> Optional[asyncio.Task]:
+        """Start (or return the in-flight) background recovery task.  It
+        runs ``config.recover`` on the dispatch executor — serialized with
+        batches and mutations, so the fan-out stacks never swap mid-query —
+        and is tracked in ``_dispatches`` so ``stop()`` awaits it."""
+        if self._recovering is not None:
+            return self._recovering
+        if self.config.recover is None:
+            return None
+
+        loop = asyncio.get_running_loop()
+
+        async def _run():
+            t0 = time.monotonic()
+            try:
+                await loop.run_in_executor(self._exec, self.config.recover)
+                self.metrics.on_recovery(time.monotonic() - t0)
+                self._seen_lost.clear()   # a later loss is a new event
+            except Exception:  # noqa: BLE001 — a failed recovery leaves the
+                pass           # shard lost; the retry/fail path bounds callers
+            finally:
+                self._recovering = None
+
+        task = asyncio.create_task(_run())
+        self._recovering = task
+        self._dispatches.add(task)
+        task.add_done_callback(self._dispatches.discard)
+        return task
 
     async def _dispatch(self, reqs: List[_Pending], rows: int) -> None:
         loop = asyncio.get_running_loop()
         batch = self._assemble(reqs)
         t0 = time.monotonic()
         delays = iter(self.config.retry.delays())
+        recovery_waits = 0
         while True:
             try:
-                ids, scores, stats, builds = await loop.run_in_executor(
+                ids, scores, stats, builds, missing = await loop.run_in_executor(
                     self._exec, self._query_once, batch)
                 break
+            except ShardLostError as e:
+                # allow_partial=False policy: queue this batch behind shard
+                # recovery, then re-dispatch for FULL results.  Bounded:
+                # each wait either recovers the shard (progress) or falls
+                # through to the retry budget.
+                self.metrics.on_shard_lost()
+                rec = self._kick_recovery()
+                if rec is not None and recovery_waits < 2:
+                    recovery_waits += 1
+                    try:
+                        await asyncio.shield(rec)
+                    except Exception:  # noqa: BLE001 — re-dispatch decides
+                        pass
+                    continue
+                try:
+                    delay = next(delays)
+                except StopIteration:
+                    self._fail_batch(reqs, e)
+                    return
+                self.metrics.retries += 1
+                await asyncio.sleep(delay)
             except Exception as e:  # noqa: BLE001 — timeout/device errors
                 if isinstance(e, TimeoutError):
                     self.metrics.timeouts += 1
                 try:
                     delay = next(delays)
                 except StopIteration:
-                    for req in reqs:
-                        if not req.future.done():
-                            req.future.set_exception(
-                                RuntimeError(f"batch dispatch failed: {e!r}"))
-                    self.metrics.on_fail(len(reqs))
+                    self._fail_batch(reqs, e)
                     return
                 self.metrics.retries += 1
                 await asyncio.sleep(delay)
         wall = time.monotonic() - t0
         self.metrics.on_batch(rows, wall, stats)
         self.metrics.query_index_builds += builds
+        if missing:
+            # degraded delivery: flag every request in the batch and start
+            # rebuilding the lost shards behind the traffic
+            self.metrics.on_degraded(len(reqs))
+            for shard in set(missing) - self._seen_lost:
+                self._seen_lost.add(shard)
+                self.metrics.on_shard_lost()
+            self._kick_recovery()
         now = time.monotonic()
         off = 0
         for req in reqs:
             n = len(req.nnz)
-            out = (ids[off:off + n, :req.k].copy(),
-                   scores[off:off + n, :req.k].copy())
+            out = ServeResult(ids[off:off + n, :req.k].copy(),
+                              scores[off:off + n, :req.k].copy(),
+                              missing_shards=missing)
             off += n
             if not req.future.done():
                 req.future.set_result(out)
@@ -404,3 +497,10 @@ class KNNScheduler:
                 missed_deadline=(req.t_deadline is not None
                                  and now > req.t_deadline),
             )
+
+    def _fail_batch(self, reqs: List[_Pending], e: BaseException) -> None:
+        for req in reqs:
+            if not req.future.done():
+                req.future.set_exception(
+                    RuntimeError(f"batch dispatch failed: {e!r}"))
+        self.metrics.on_fail(len(reqs))

@@ -58,8 +58,9 @@ the work done, never the result.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +86,7 @@ from repro.core.engine import (
 from repro.core.iib import iib_scan_join
 from repro.core.iiib import iiib_scan_join
 from repro.core.topk import TopKState, init_topk, tree_reduce_topk
+from repro.runtime.fault import ShardLostError
 from repro.sparse.format import SparseBatch
 
 P = jax.sharding.PartitionSpec
@@ -105,6 +107,12 @@ class StoreStats:
     deleted: int = 0             # rows tombstoned via delete()
     expired: int = 0             # rows tombstoned via TTL expiry
     compactions: int = 0         # shard compactions (real rebuilds)
+    saves: int = 0               # checkpoint commits (save / save_dirty)
+    save_wall_s: float = 0.0
+    shard_losses: int = 0        # shards marked lost by a failed dispatch
+    degraded_queries: int = 0    # queries served with shards missing
+    recoveries: int = 0          # shards rebuilt from a checkpoint slice
+    recovery_wall_s: float = 0.0
 
 
 def _np_sparse_slice(idx, val, nnz, lo: int, hi: int, dim: int) -> SparseBatch:
@@ -135,7 +143,20 @@ class ShardedKNNStore:
         num_shards: Optional[int] = None,
         auto_compact: float = 0.5,
         calibration=None,
+        *,
+        _row_ids: Optional[np.ndarray] = None,
+        _alive: Optional[np.ndarray] = None,
+        _deadline: Optional[np.ndarray] = None,
+        _next_gid: Optional[int] = None,
+        _frozen_rank: Optional[np.ndarray] = None,
+        _shard_sizes: Optional[Sequence[int]] = None,
     ):
+        # The underscored keywords are the checkpoint-restore channel used
+        # by :meth:`load`: per-row state (global ids, tombstone masks, TTL
+        # deadlines, in concatenated shard order), the saved IIIB rank
+        # (restored verbatim — recomputing would break bit-parity after
+        # post-freeze mutations), and — when the loader's shard count
+        # matches the save — the exact saved row split.
         t0 = time.perf_counter()
         if spec.use_kernel:
             raise ValueError("use_kernel is not supported by ShardedKNNStore yet")
@@ -175,8 +196,15 @@ class ShardedKNNStore:
         self.algorithm = spec.algorithm or p.algorithm
 
         # contiguous balanced row ranges (ragged allowed: first n_s % shards
-        # ranges get one extra row — np.array_split semantics)
-        sizes = [len(a) for a in np.array_split(np.arange(n_s), self.n_shards)]
+        # ranges get one extra row — np.array_split semantics); a restore
+        # onto the SAME shard count reuses the exact saved split so block
+        # geometry (and the dispatch shape) round-trips
+        if _shard_sizes is not None and len(_shard_sizes) == self.n_shards:
+            sizes = [int(s) for s in _shard_sizes]
+            if sum(sizes) != n_s:
+                raise ValueError("restored shard sizes do not cover S")
+        else:
+            sizes = [len(a) for a in np.array_split(np.arange(n_s), self.n_shards)]
         bounds = np.concatenate([[0], np.cumsum(sizes)])
         self.s_block = max(1, min(spec.s_block or p.s_block, min(sizes)))
 
@@ -186,10 +214,13 @@ class ShardedKNNStore:
         self._rank_np = None
         self._rank_dev = None
         if self.algorithm == "iiib":
-            freq = np.zeros(self.dim, np.int64)
-            ok = idx < self.dim
-            np.add.at(freq, np.where(ok, idx, 0).ravel(), ok.ravel())
-            self._rank_np = iiib_mod.s_frequency_rank(freq)
+            if _frozen_rank is not None:
+                self._rank_np = np.asarray(_frozen_rank)
+            else:
+                freq = np.zeros(self.dim, np.int64)
+                ok = idx < self.dim
+                np.add.at(freq, np.where(ok, idx, 0).ravel(), ok.ravel())
+                self._rank_np = iiib_mod.s_frequency_rank(freq)
             self._rank_dev = jnp.asarray(self._rank_np)
 
         shard_spec = dataclasses.replace(
@@ -200,15 +231,31 @@ class ShardedKNNStore:
         # by the store (assembled sharded over the mesh below)
         self.shards: List[SparseKNNIndex] = []
         self._gids: List[np.ndarray] = []
+        self._lost: Set[int] = set()
+        self.fault_plan = None          # FaultPlan hook, consulted per dispatch
         for i in range(self.n_shards):
             lo, hi = int(bounds[i]), int(bounds[i + 1])
-            self.shards.append(SparseKNNIndex.build(
+            shard = SparseKNNIndex.build(
                 _np_sparse_slice(idx, val, nnz, lo, hi, self.dim), shard_spec,
                 cache_device_blocks=False, frozen_rank=self._rank_np,
                 calibration=self.calibration,
-            ))
-            self._gids.append(np.arange(lo, hi, dtype=np.int32))
-        self._next_gid = n_s
+            )
+            if _alive is not None:
+                shard._alive = np.asarray(_alive[lo:hi], bool).copy()
+            if _deadline is not None:
+                shard._deadline = np.asarray(_deadline[lo:hi], np.float64).copy()
+            self.shards.append(shard)
+            if _row_ids is not None:
+                self._gids.append(np.asarray(_row_ids[lo:hi], np.int32).copy())
+            else:
+                self._gids.append(np.arange(lo, hi, dtype=np.int32))
+        self._next_gid = n_s if _next_gid is None else int(_next_gid)
+
+        # durability bookkeeping: which shards diverge from the last commit
+        # (a fresh build has never been committed — everything is dirty)
+        self._dirty: Set[int] = set(range(self.n_shards))
+        self._dirty_rank = True
+        self._last_save_dir: Optional[str] = None
 
         self._shard_arrays: List[Dict[str, np.ndarray]] = [
             self._assemble_shard(i) for i in range(self.n_shards)
@@ -320,13 +367,17 @@ class ShardedKNNStore:
 
     def _shard_ids_valid(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
         """(B, s_block) global-id stack + valid mask of shard i (padding and
-        tombstones folded in — the only arrays delete()/expire() touch)."""
+        tombstones folded in — the only arrays delete()/expire() touch).
+        A LOST shard's mask is all-false: degraded queries run the same
+        fan-out program, the dead shard just offers no candidates."""
         shard = self.shards[i]
         b, sb = shard.num_blocks, self.s_block
         ids = np.zeros(b * sb, np.int32)
         ids[: shard.n_s] = self._gids[i]
         valid = np.arange(b * sb) < shard.n_s
         valid[: shard.n_s] &= shard._alive
+        if i in self._lost:
+            valid[:] = False
         return ids.reshape(b, sb), valid.reshape(b, sb)
 
     def _upload_stacks(self):
@@ -530,45 +581,80 @@ class ShardedKNNStore:
                     spec, occupied_tiles=self._occupied_tiles,
                     calibration=self.calibration)
 
-    def query(self, R: SparseBatch, stats: Optional[JoinStats] = None) -> JoinResult:
+    def query(
+        self,
+        R: SparseBatch,
+        stats: Optional[JoinStats] = None,
+        allow_partial: bool = False,
+    ) -> JoinResult:
         """R ⋈_KNN S over all shards.  Returns stable global S ids.
 
         One device dispatch (the jitted fan-out program) and one host sync
         (the result pull) per R block, independent of the shard count.
+
+        ``allow_partial`` is the degraded serving mode: when a shard fails
+        mid-dispatch (or is already marked lost) the query proceeds over
+        the surviving shards — same fan-out program, the lost shards' valid
+        masks zeroed — and the result carries ``missing_shards``.  Without
+        it a lost shard raises :class:`ShardLostError` (callers recover()
+        first, then retry — the queued-behind-recovery policy).
         """
         t_q = time.perf_counter()
         stats = stats if stats is not None else JoinStats()
         if R.dim != self.dim:
             raise ValueError(f"dim mismatch: store has {self.dim}, got {R.dim}")
+        if self._lost and not allow_partial:
+            raise ShardLostError(
+                min(self._lost),
+                f"shard(s) {sorted(self._lost)} lost; recover() or pass "
+                "allow_partial=True",
+            )
         n_r = R.num_vectors
         rb = min(self.spec.r_block or self.plan_for(R).r_block, n_r)
-        st = self._stacks
         out_scores, out_ids = [], []
         for r0 in range(0, n_r, rb):
             br, r_valid = _pad_block(R, r0, rb)
             fn = self._query_fn(rb)
-            if self.algorithm == "bf":
-                state = fn(
-                    br.indices, br.values, br.nnz,
-                    st["idx"], st["val"], st["nnz"], st["ids"], st["valid"],
-                )
-            elif self.algorithm == "iib":
+            if self.algorithm == "iib":
                 prep = prepare_r_block_inputs(br, "iib", self.tile)
-                state = fn(
-                    prep["r_tiles"], prep["tiles"],
-                    st["rows"], st["vals"], st["counts"], st["ids"], st["valid"],
-                )
-            else:
+            elif self.algorithm == "iiib":
                 prep = prepare_r_block_inputs(
                     br, "iiib", self.tile,
                     rank_np=self._rank_np, rank_dev=self._rank_dev,
                 )
-                state, kept, thr = fn(
-                    prep["r_tiles"], prep["mwt"], prep["tiles"],
-                    jnp.asarray(r_valid),
-                    st["rows"], st["vals"], st["counts"], st["mass"],
-                    st["ids"], st["valid"],
-                )
+            # each injected ShardLostError marks one more shard lost and
+            # (in degraded mode) redrives this block over the survivors —
+            # bounded by the shard count, since a lost shard stays lost
+            while True:
+                st = self._stacks
+                try:
+                    if self.fault_plan is not None:
+                        self.fault_plan.on_dispatch()
+                    if self.algorithm == "bf":
+                        state = fn(
+                            br.indices, br.values, br.nnz,
+                            st["idx"], st["val"], st["nnz"],
+                            st["ids"], st["valid"],
+                        )
+                    elif self.algorithm == "iib":
+                        state = fn(
+                            prep["r_tiles"], prep["tiles"],
+                            st["rows"], st["vals"], st["counts"],
+                            st["ids"], st["valid"],
+                        )
+                    else:
+                        state, kept, thr = fn(
+                            prep["r_tiles"], prep["mwt"], prep["tiles"],
+                            jnp.asarray(r_valid),
+                            st["rows"], st["vals"], st["counts"], st["mass"],
+                            st["ids"], st["valid"],
+                        )
+                    break
+                except ShardLostError as e:
+                    self._mark_lost(e.shard)
+                    if not allow_partial:
+                        raise
+            if self.algorithm == "iiib":
                 stats.list_entries += int(np.asarray(kept).sum())
                 stats.min_prune_trace.append(np.asarray(thr))
             stats.device_dispatches += 1
@@ -595,10 +681,14 @@ class ShardedKNNStore:
         self.stats.queries += 1
         self.stats.device_dispatches += stats.device_dispatches
         self.stats.host_syncs += stats.host_syncs
+        missing = tuple(sorted(self._lost))
+        if missing:
+            self.stats.degraded_queries += 1
         return JoinResult(
             scores=jnp.asarray(np.concatenate(out_scores)),
             ids=jnp.asarray(np.concatenate(out_ids)),
             stats=stats,
+            missing_shards=missing,
         )
 
     # -- mutation ------------------------------------------------------------
@@ -619,7 +709,10 @@ class ShardedKNNStore:
         if S_new.dim != self.dim:
             raise ValueError(f"dim mismatch: store has {self.dim}, got {S_new.dim}")
         t0 = time.perf_counter()
-        tgt = int(np.argmin([s.live_rows for s in self.shards]))
+        candidates = [i for i in range(self.n_shards) if i not in self._lost]
+        if not candidates:
+            raise ShardLostError(min(self._lost), "all shards lost")
+        tgt = min(candidates, key=lambda i: self.shards[i].live_rows)
         deadline = None
         if ttl is not None:
             deadline = (time.time() if now is None else now) + float(ttl)
@@ -629,6 +722,7 @@ class ShardedKNNStore:
         gids = np.arange(self._next_gid, self._next_gid + n_new, dtype=np.int32)
         self._gids[tgt] = np.concatenate([self._gids[tgt], gids])
         self._next_gid += n_new
+        self._dirty.add(tgt)
         self._shard_arrays[tgt] = self._assemble_shard(tgt, from_block=from_block)
         self._upload_stacks()
         self.stats.build_wall_s += time.perf_counter() - t0
@@ -642,7 +736,10 @@ class ShardedKNNStore:
         for i, shard in enumerate(self.shards):
             local = np.nonzero(np.isin(self._gids[i], ids))[0]
             if local.size:
-                newly += shard.delete(local)
+                n = shard.delete(local)
+                if n:
+                    self._dirty.add(i)
+                newly += n
         if newly:
             self.stats.deleted += newly
             if not self._maybe_compact():
@@ -652,7 +749,12 @@ class ShardedKNNStore:
     def expire(self, now: Optional[float] = None) -> int:
         """Tombstone rows whose TTL deadline has passed."""
         now = time.time() if now is None else now
-        newly = sum(shard.expire(now) for shard in self.shards)
+        newly = 0
+        for i, shard in enumerate(self.shards):
+            n = shard.expire(now)
+            if n:
+                self._dirty.add(i)
+            newly += n
         if newly:
             self.stats.expired += newly
             if not self._maybe_compact():
@@ -692,6 +794,7 @@ class ShardedKNNStore:
             # placeholder row a fully-dead shard keeps)
             self._gids[i] = self._gids[i][shard.last_compact_keep]
             changed.append(i)
+            self._dirty.add(i)
             self._shard_arrays[i] = self._assemble_shard(i)
         if changed:
             self.stats.compactions += len(changed)
@@ -712,9 +815,253 @@ class ShardedKNNStore:
             np.add.at(freq, np.where(ok, shard._idx, 0).ravel(), ok.ravel())
         self._rank_np = iiib_mod.s_frequency_rank(freq)
         self._rank_dev = jnp.asarray(self._rank_np)
+        self._dirty_rank = True
         for i, shard in enumerate(self.shards):
             shard.refreeze(frozen_rank=self._rank_np)
+            self._dirty.add(i)
             self._shard_arrays[i] = self._assemble_shard(i)
         self._upload_stacks()
         self.stats.build_wall_s += time.perf_counter() - t0
         return self
+
+    # -- durability (DESIGN.md §9) -------------------------------------------
+
+    def _shard_key(self, i: int) -> str:
+        return f"shard_{i:05d}"
+
+    def _ckpt_tree(self) -> dict:
+        """The persisted state: per-shard host mirrors (rows exactly as the
+        engine holds them, tombstones included), tombstone/TTL masks, the
+        global-id stacks, and the frozen IIIB rank.  Device stacks, tile
+        indexes and planner statistics are NOT persisted — they are pure
+        functions of this tree and rebuild on load."""
+        tree = {}
+        for i, shard in enumerate(self.shards):
+            tree[self._shard_key(i)] = {
+                "idx": shard._idx.astype(np.int32),
+                "val": shard._val.astype(np.float32),
+                "nnz": shard._nnz.astype(np.int32),
+                "alive": shard._alive,
+                "deadline": shard._deadline,
+                "gids": self._gids[i].astype(np.int32),
+            }
+        if self._rank_np is not None:
+            tree["rank"] = self._rank_np
+        return tree
+
+    def _meta(self) -> dict:
+        return {
+            "spec": dataclasses.asdict(self.spec),
+            "algorithm": self.algorithm,
+            "s_block": self.s_block,
+            "dim": self.dim,
+            "n_shards": self.n_shards,
+            "shard_rows": [int(s.n_s) for s in self.shards],
+            "next_gid": int(self._next_gid),
+            "auto_compact": self.auto_compact,
+        }
+
+    def save(self, directory: str, extra: Optional[dict] = None,
+             dirty_only: bool = False) -> str:
+        """Commit the store to ``directory`` as a new checkpoint step
+        (atomic two-phase commit via ``repro.checkpoint``).  Returns the
+        committed path.  ``extra`` rides along in the manifest (the kNN-LM
+        example persists its id→token value map this way).
+
+        ``dirty_only`` (what :meth:`save_dirty` passes) hard-links every
+        shard untouched since the last commit from that commit's dir
+        instead of re-serializing it — an incremental save costs O(dirty
+        shards) writes, not O(store).
+        """
+        from repro.checkpoint import ckpt as _ckpt
+
+        t0 = time.perf_counter()
+        ls = _ckpt.latest_step(directory)
+        step = 0 if ls is None else ls + 1
+        link_from = link_paths = None
+        if dirty_only and self._last_save_dir is not None:
+            clean = [i for i in range(self.n_shards) if i not in self._dirty]
+            link_paths = set()
+            for i in clean:
+                key = self._shard_key(i)
+                for leaf in ("idx", "val", "nnz", "alive", "deadline", "gids"):
+                    link_paths.add(f"['{key}']['{leaf}']")
+            if self._rank_np is not None and not self._dirty_rank:
+                link_paths.add("['rank']")
+            link_from = self._last_save_dir
+        path = _ckpt.save(
+            directory, step, self._ckpt_tree(),
+            extra={"store": self._meta(), **(extra or {})},
+            link_from=link_from, link_paths=link_paths,
+        )
+        self._dirty.clear()
+        self._dirty_rank = False
+        self._last_save_dir = path
+        self.stats.saves += 1
+        self.stats.save_wall_s += time.perf_counter() - t0
+        return path
+
+    def save_dirty(self, directory: str, extra: Optional[dict] = None) -> str:
+        """Incremental :meth:`save`: only shards touched by add/delete/
+        expire/compact/refreeze since the last commit are re-serialized."""
+        return self.save(directory, extra=extra, dirty_only=True)
+
+    @classmethod
+    def load(
+        cls,
+        directory: str,
+        mesh=None,
+        axes: Optional[Sequence[str]] = None,
+        num_shards: Optional[int] = None,
+        step: Optional[int] = None,
+        calibration=None,
+    ) -> "ShardedKNNStore":
+        """Warm-restart a saved store: host mirrors, spec, frozen IIIB
+        rank, id stacks and tombstone state come from the newest valid
+        checkpoint (``step`` pins one); device stacks and tile indexes are
+        rebuilt, elastically resharded onto whatever mesh the loader
+        passes.  Queries after load are bit-identical to the saved store
+        (concatenated row order — the tie-winning order — is preserved
+        across any contiguous re-split).  The manifest ``extra`` is exposed
+        as ``store.loaded_extra``.
+        """
+        from repro.checkpoint import ckpt as _ckpt
+
+        if step is None:
+            step = _ckpt.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no valid checkpoint in {directory}")
+        arrays, extra = _ckpt.load_arrays(directory, step)
+        meta = extra["store"]
+        n_saved = int(meta["n_shards"])
+
+        def leaf(i: int, name: str) -> np.ndarray:
+            return arrays[f"['shard_{i:05d}']['{name}']"]
+
+        # concatenate per-shard mirrors IN SHARD ORDER (this order is the
+        # id-tie-winning order; any contiguous re-split preserves it),
+        # padding the ragged feature axis to the widest shard
+        f_max = max(leaf(i, "idx").shape[1] for i in range(n_saved))
+        idxs, vals = [], []
+        for i in range(n_saved):
+            ii, vv = leaf(i, "idx"), leaf(i, "val")
+            if ii.shape[1] < f_max:
+                ii, vv = _pad_feature_axis(ii, vv, f_max, int(meta["dim"]))
+            idxs.append(ii)
+            vals.append(vv)
+        S = SparseBatch(
+            indices=jnp.asarray(np.concatenate(idxs)),
+            values=jnp.asarray(np.concatenate(vals)),
+            nnz=jnp.asarray(np.concatenate(
+                [leaf(i, "nnz") for i in range(n_saved)])),
+            dim=int(meta["dim"]),
+        )
+        spec = dataclasses.replace(
+            JoinSpec(**meta["spec"]),
+            algorithm=meta["algorithm"], s_block=int(meta["s_block"]),
+        )
+        store = cls(
+            S, spec, mesh=mesh, axes=axes, num_shards=num_shards,
+            auto_compact=float(meta["auto_compact"]), calibration=calibration,
+            _row_ids=np.concatenate([leaf(i, "gids") for i in range(n_saved)]),
+            _alive=np.concatenate([leaf(i, "alive") for i in range(n_saved)]),
+            _deadline=np.concatenate(
+                [leaf(i, "deadline") for i in range(n_saved)]),
+            _next_gid=int(meta["next_gid"]),
+            _frozen_rank=arrays.get("['rank']"),
+            _shard_sizes=[int(r) for r in meta["shard_rows"]],
+        )
+        # When the loaded layout matches the saved one, the in-memory state
+        # EQUALS the loaded commit: nothing is dirty, and incremental saves
+        # may hard-link from it.  An ELASTIC load (different shard count /
+        # split) re-partitioned the rows, so the saved per-shard leaves no
+        # longer correspond to this store's shards — everything stays dirty
+        # and the next save is a full one.
+        same_layout = (
+            store.n_shards == n_saved
+            and [s.n_s for s in store.shards]
+            == [int(r) for r in meta["shard_rows"]]
+        )
+        if same_layout:
+            store._dirty.clear()
+            store._dirty_rank = False
+            store._last_save_dir = os.path.join(directory, f"step_{step:08d}")
+        store.loaded_extra = {k: v for k, v in extra.items() if k != "store"}
+        return store
+
+    # -- shard loss + recovery -----------------------------------------------
+
+    @property
+    def lost_shards(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._lost))
+
+    def _mark_lost(self, i: int) -> None:
+        """Mark shard i failed: its valid mask zeroes (degraded queries see
+        no candidates from it) until :meth:`recover` rebuilds it."""
+        if not 0 <= i < self.n_shards:
+            raise ValueError(f"shard {i} out of range")
+        if i not in self._lost:
+            self._lost.add(i)
+            self.stats.shard_losses += 1
+            self._refresh_valid()
+
+    def mark_lost(self, i: int) -> None:
+        self._mark_lost(i)
+
+    def recover(self, directory: str, step: Optional[int] = None) -> Tuple[int, ...]:
+        """Rebuild every lost shard from its checkpoint slice and rejoin it
+        to the fan-out.  Reads ONLY the lost shards' leaves (sha-verified);
+        the surviving shards' state — including mutations since the save —
+        is untouched.  Mutations the lost shard took after the checkpoint
+        are gone (that is what 'lost' means); its global ids are stable
+        because the id stack is part of the slice.  Returns the recovered
+        shard indexes.
+        """
+        from repro.checkpoint import ckpt as _ckpt
+
+        if not self._lost:
+            return ()
+        t0 = time.perf_counter()
+        if step is None:
+            step = _ckpt.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no valid checkpoint in {directory}")
+        recovered = []
+        shard_spec = dataclasses.replace(
+            self.spec, algorithm=self.algorithm, s_block=self.s_block
+        )
+        for i in sorted(self._lost):
+            key = self._shard_key(i)
+            arrays, extra = _ckpt.load_arrays(
+                directory, step, prefix=f"['{key}']"
+            )
+            if int(extra["store"]["n_shards"]) != self.n_shards:
+                raise ValueError(
+                    "checkpoint shard layout does not match the live store "
+                    f"({extra['store']['n_shards']} vs {self.n_shards}); "
+                    "use ShardedKNNStore.load() for elastic restarts"
+                )
+            g = lambda name: arrays[f"['{key}']['{name}']"]
+            idx, val, nnz = g("idx"), g("val"), g("nnz")
+            shard = SparseKNNIndex.build(
+                _np_sparse_slice(idx, val, nnz, 0, len(nnz), self.dim),
+                shard_spec, cache_device_blocks=False,
+                frozen_rank=self._rank_np, calibration=self.calibration,
+            )
+            shard._alive = np.asarray(g("alive"), bool).copy()
+            shard._deadline = np.asarray(g("deadline"), np.float64).copy()
+            self.shards[i] = shard
+            self._gids[i] = np.asarray(g("gids"), np.int32).copy()
+            recovered.append(i)
+        self._lost.clear()
+        for i in recovered:
+            # post-checkpoint mutations on the shard were lost with it, so
+            # its in-memory state matches the slice we just read — but it
+            # may DIFFER from the latest commit if that commit is newer, so
+            # conservatively re-serialize it on the next incremental save
+            self._dirty.add(i)
+            self._shard_arrays[i] = self._assemble_shard(i)
+        self._upload_stacks()
+        self.stats.recoveries += len(recovered)
+        self.stats.recovery_wall_s += time.perf_counter() - t0
+        return tuple(recovered)

@@ -1,13 +1,24 @@
-"""Checkpointing: atomic commit, integrity, elastic restore, GC."""
+"""Checkpointing: atomic commit, integrity, elastic restore, GC,
+crash-window recovery (orphan adoption, SIGKILL mid-save), incremental
+hard-link saves, and path-addressed partial loads."""
 import json
 import os
+import signal
+import subprocess
+import sys
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.checkpoint.ckpt import CheckpointManager, latest_step, restore, save
+from repro.checkpoint.ckpt import (
+    CheckpointManager,
+    latest_step,
+    load_arrays,
+    restore,
+    save,
+)
 
 
 def _tree(seed=0):
@@ -91,3 +102,140 @@ def test_shape_mismatch_raises(tmp_path):
     save(str(tmp_path), 1, {"w": jnp.zeros((4,))})
     with pytest.raises(ValueError):
         restore(str(tmp_path), 1, {"w": jnp.zeros((5,))})
+
+
+def test_junk_step_names_ignored(tmp_path):
+    """``latest_step`` must not trip over names that merely start with
+    ``step_`` (stray files, hand-made dirs, editor droppings)."""
+    save(str(tmp_path), 4, _tree())
+    os.makedirs(tmp_path / "step_notanumber")
+    os.makedirs(tmp_path / "step_12extra")
+    (tmp_path / "step_99999999").write_text("a FILE, not a checkpoint dir")
+    (tmp_path / "step_").mkdir()
+    assert latest_step(str(tmp_path)) == 4
+    CheckpointManager(str(tmp_path))           # GC sweep must not crash
+
+
+def test_overwrite_same_step_is_atomic(tmp_path):
+    """Re-saving an existing step swaps in the new copy without a window
+    where no valid checkpoint exists, and leaves no ``.old-`` debris."""
+    save(str(tmp_path), 1, _tree(1))
+    save(str(tmp_path), 1, _tree(2))
+    assert latest_step(str(tmp_path)) == 1
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), _tree())
+    restored, _ = restore(str(tmp_path), 1, like)
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]),
+        np.asarray(_tree(2)["params"]["w"]),
+    )
+    assert not [n for n in os.listdir(tmp_path) if ".old-" in n]
+
+
+def test_orphaned_old_dir_adopted(tmp_path):
+    """Crash window between rename-aside and publish: the only valid copy
+    of the step is the ``.old-`` dir — restore must adopt it back."""
+    save(str(tmp_path), 2, _tree(3))
+    os.rename(tmp_path / "step_00000002", tmp_path / "step_00000002.old-777")
+    assert latest_step(str(tmp_path)) == 2     # adopted
+    assert (tmp_path / "step_00000002").is_dir()
+    assert not (tmp_path / "step_00000002.old-777").exists()
+
+
+def test_sigkill_mid_save_falls_back(tmp_path):
+    """A process SIGKILLed mid-write leaves a torn tmp dir; restore must
+    resolve the previous committed step and the torn write must verify
+    as absent, not as corrupt-but-present."""
+    save(str(tmp_path), 1, _tree(1))
+    code = f"""
+import os, signal
+import numpy as np
+import jax.numpy as jnp
+from repro.checkpoint.ckpt import save
+
+real_save = np.save
+def killing_save(file, arr, *a, **kw):
+    real_save(file, arr, *a, **kw)
+    os.kill(os.getpid(), signal.SIGKILL)      # die after the FIRST leaf
+np.save = killing_save
+save({str(tmp_path)!r}, 2, {{"params": {{"w": jnp.ones((8, 16)),
+                                         "b": jnp.ones(16)}},
+                             "step": jnp.int32(9)}})
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr
+    assert any(".tmp-" in n for n in os.listdir(tmp_path))   # torn write
+    assert latest_step(str(tmp_path)) == 1                   # skipped
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), _tree())
+    restored, _ = restore(str(tmp_path), 1, like)
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]),
+        np.asarray(_tree(1)["params"]["w"]),
+    )
+
+
+def test_incremental_save_hard_links_leaves(tmp_path):
+    """``link_from``/``link_paths`` reuse a previous commit's leaf files
+    (same inode) and manifest entries instead of re-serializing."""
+    tree = _tree(7)
+    save(str(tmp_path), 0, tree)
+    save(str(tmp_path), 1, tree,
+         link_from=str(tmp_path / "step_00000000"),
+         link_paths={"['params']['w']", "['params']['b']"})
+    with open(tmp_path / "step_00000000" / "manifest.json") as f:
+        m0 = {e["path"]: e for e in json.load(f)["leaves"]}
+    with open(tmp_path / "step_00000001" / "manifest.json") as f:
+        m1 = {e["path"]: e for e in json.load(f)["leaves"]}
+    for path in ("['params']['w']", "['params']['b']"):
+        ino0 = os.stat(tmp_path / "step_00000000" / m0[path]["file"]).st_ino
+        ino1 = os.stat(tmp_path / "step_00000001" / m1[path]["file"]).st_ino
+        assert ino0 == ino1, f"{path} was re-serialized, not linked"
+        assert m0[path]["sha"] == m1[path]["sha"]
+    # the unlinked leaf was written fresh
+    ino0 = os.stat(tmp_path / "step_00000000" / m0["['step']"]["file"]).st_ino
+    ino1 = os.stat(tmp_path / "step_00000001" / m1["['step']"]["file"]).st_ino
+    assert ino0 != ino1
+    # both steps restore and verify independently
+    assert latest_step(str(tmp_path)) == 1
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    restored, _ = restore(str(tmp_path), 1, like)
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"]))
+
+
+def test_load_arrays_prefix_and_corrupt_detection(tmp_path):
+    tree = {"s0": {"x": jnp.arange(6), "y": jnp.ones(3)},
+            "s1": {"x": jnp.arange(4)}}
+    save(str(tmp_path), 0, tree, extra={"n": 2})
+    arrays, extra = load_arrays(str(tmp_path), 0, prefix="['s0']")
+    assert set(arrays) == {"['s0']['x']", "['s0']['y']"}
+    assert extra == {"n": 2}
+    np.testing.assert_array_equal(arrays["['s0']['x']"], np.arange(6))
+
+    from repro.runtime.fault import corrupt_checkpoint_leaf
+
+    corrupt_checkpoint_leaf(str(tmp_path), step=0, leaf=0)
+    with pytest.raises(ValueError, match="corrupt checkpoint leaf"):
+        load_arrays(str(tmp_path), 0)
+
+
+def test_corrupt_leaf_injection_is_copy_on_write(tmp_path):
+    """Corrupting a hard-linked leaf must not damage the other steps
+    sharing its inode — otherwise the fall-back-to-previous-step path the
+    injection exists to exercise is destroyed by the injection itself."""
+    tree = _tree(4)
+    save(str(tmp_path), 0, tree)
+    save(str(tmp_path), 1, tree,
+         link_from=str(tmp_path / "step_00000000"),
+         link_paths={"['params']['w']", "['params']['b']", "['step']"})
+    from repro.runtime.fault import corrupt_checkpoint_leaf
+
+    corrupt_checkpoint_leaf(str(tmp_path))     # defaults to newest (1)
+    assert latest_step(str(tmp_path)) == 0     # 1 invalid, 0 UNDAMAGED
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    restored, _ = restore(str(tmp_path), 0, like)
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"]))

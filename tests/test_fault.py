@@ -1,10 +1,16 @@
-"""Fault-tolerance runtime: supervisor retries, NaN guard, watchdog arming."""
+"""Fault-tolerance runtime: supervisor retries, NaN guard, watchdog arming,
+fault-injection primitives (FaultPlan / ShardLostError)."""
+import time
+
 import numpy as np
 import pytest
 
 from repro.runtime.fault import (
+    FaultPlan,
+    FaultSpec,
     NonRetryableError,
     RetryPolicy,
+    ShardLostError,
     Supervisor,
     guard_finite,
 )
@@ -47,6 +53,33 @@ def test_supervisor_exhausts_retries():
     sup = Supervisor(step, lambda r: 0, RetryPolicy(max_retries=2, backoff_s=0.0))
     with pytest.raises(RuntimeError, match="retries exhausted"):
         sup.run(0, 3)
+
+
+def test_supervisor_retry_budget_is_per_incident():
+    """Regression: the retry budget must reset on step success.  The old
+    code materialized ``policy.delays()`` once per ``run``, so a second
+    unrelated incident inherited a part-spent (or empty) budget and blew
+    up with "retries exhausted" even though it was the first failure of
+    its own incident."""
+    fail_at = {2: 1, 4: 1}          # two incidents, one failure each
+
+    def step(i):
+        if fail_at.get(i, 0):
+            fail_at[i] -= 1
+            raise RuntimeError(f"incident@{i}")
+
+    restores = []
+
+    def restore_fn(reason):
+        restores.append(reason)
+        return int(reason.rsplit("@", 1)[1])   # replay the failed step
+
+    # max_retries=1: each incident needs (and gets) the full one-delay
+    # budget; a shared per-run iterator would StopIteration on incident 2
+    sup = Supervisor(step, restore_fn, RetryPolicy(max_retries=1, backoff_s=0.0))
+    assert sup.run(0, 6) == 6
+    assert sup.failures == 2
+    assert len(restores) == 2
 
 
 def test_nonretryable_propagates():
@@ -102,3 +135,31 @@ def test_with_timeout_propagates_exceptions():
 
     with pytest.raises(ValueError, match="inner failure"):
         with_timeout(boom, 5.0)
+
+
+def test_shard_lost_error_carries_shard():
+    e = ShardLostError(3)
+    assert e.shard == 3 and "shard 3" in str(e)
+    assert isinstance(e, RuntimeError)
+    assert ShardLostError(1, "custom").args == ("custom",)
+
+
+def test_fault_plan_fires_once_at_its_dispatch():
+    plan = FaultPlan([FaultSpec("shard_error", shard=2, at_dispatch=1)])
+    plan.on_dispatch()                       # dispatch 0: armed, silent
+    with pytest.raises(ShardLostError) as ei:
+        plan.on_dispatch()                   # dispatch 1: fires
+    assert ei.value.shard == 2
+    plan.on_dispatch()                       # spent: at most once
+    assert plan.dispatches == 3
+    assert len(plan.fired) == 1
+
+
+def test_fault_plan_wedge_sleeps_and_kind_validated():
+    plan = FaultPlan([FaultSpec("wedge", at_dispatch=0, wedge_s=0.02)])
+    t0 = time.monotonic()
+    plan.on_dispatch()
+    assert time.monotonic() - t0 >= 0.02
+    assert plan.fired
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("meteor_strike")
