@@ -31,18 +31,25 @@ crash-smoke:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 	$(PYTHON) -m benchmarks.crash_smoke
 
-# machine-readable perf record for the PR trajectory (BENCH_*.json);
-# store streams record per-shard dispatch/sync counts on a 4-shard fan-out,
-# the serving stream records the open-loop scheduler load test, and the
-# serving_faulted stream records the shard-loss fault-injection run
-# (zero lost futures, degraded service, recovery time, post-recovery parity)
+# machine-readable perf record for the PR trajectory (BENCH_*.json, current
+# target parameterized as BENCH_OUT); store streams record per-shard
+# dispatch/sync counts on a 4-shard fan-out, the serving stream records the
+# open-loop scheduler load test, the serving_faulted stream records the
+# shard-loss fault-injection run (zero lost futures, degraded service,
+# recovery time, post-recovery parity), and the replica_faulted stream
+# records a replica kill on a 2x2 replicated store (full service through
+# the loss: zero degraded, failover + background resync, bit-parity)
+BENCH_OUT ?= BENCH_PR8.json
+
 bench:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
-	$(PYTHON) -m benchmarks.run --fast --out BENCH_PR7.json
+	$(PYTHON) -m benchmarks.run --fast --out $(BENCH_OUT)
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
-	$(PYTHON) -m benchmarks.serve_load --fast --merge BENCH_PR7.json
+	$(PYTHON) -m benchmarks.serve_load --fast --merge $(BENCH_OUT)
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
-	$(PYTHON) -m benchmarks.serve_load --fault-plan --merge BENCH_PR7.json
+	$(PYTHON) -m benchmarks.serve_load --fault-plan --merge $(BENCH_OUT)
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+	$(PYTHON) -m benchmarks.serve_load --replica-fault --merge $(BENCH_OUT)
 
 # fail if any algorithm regressed its dispatch/sync/index-build shape vs the
 # previous BENCH_*.json record (wall times are informational only)

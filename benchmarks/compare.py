@@ -123,6 +123,37 @@ def compare_serving_faulted(ns: dict, rows: list, failures: list) -> None:
                 f"{ns.get('recovery_s')}")
 
 
+def compare_replica_faulted(ns: dict, rows: list, failures: list) -> None:
+    """Gate the replica-kill serving stream (``serve_load --replica-fault``).
+
+    All bars are absolute and STRICTLY stronger than the shard-loss
+    stream's: the injected replica kill must fire, failover must absorb
+    it — every future completes FULL (zero degraded, zero lost) — the
+    background anti-entropy resync must repair the replica, and both
+    replica bit-parity (``verify_replicas``) and parity against a
+    single-device build must hold afterwards.
+    """
+    absolute = {
+        "zero_lost_futures": (ns.get("completed") == ns.get("requests")
+                              and ns.get("failed") == 0),
+        "zero_degraded": ns.get("degraded", 1) == 0,
+        "replica_killed": ns.get("replica_losses", 0) >= 1,
+        "failover_fired": ns.get("replica_failovers", 0) >= 1,
+        "resynced": (ns.get("resyncs", 0) >= 1
+                     and not ns.get("dead_replicas_after", [0])),
+        "replica_parity": bool(ns.get("replica_parity_ok")),
+        "single_device_parity": bool(ns.get("parity_vs_single_device")),
+        "query_index_builds==0": ns.get("query_index_builds") == 0,
+    }
+    for label, ok in absolute.items():
+        rows.append(f"  {'replica_faulted':12s} {label:28s} "
+                    f"{'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(f"replica_faulted.{label}")
+    rows.append(f"  {'replica_faulted':12s} {'resync_s (info)':28s} "
+                f"{ns.get('resync_s')}")
+
+
 def compare(old_path: str, new_path: str) -> int:
     old, new = _load(old_path), _load(new_path)
     failures = []
@@ -133,6 +164,9 @@ def compare(old_path: str, new_path: str) -> int:
             continue
         if name == "serving_faulted":
             compare_serving_faulted(ns, rows, failures)
+            continue
+        if name == "replica_faulted":
+            compare_replica_faulted(ns, rows, failures)
             continue
         os_ = old.get("streams", {}).get(name)
         if os_ is None:

@@ -26,8 +26,19 @@ missing shard set) or full after recovery, never dropped — and results
 must return to bit-parity with direct queries once the shard rebuilds
 from its checkpoint slice.
 
-  PYTHONPATH=src python -m benchmarks.serve_load --fast --merge BENCH_PR7.json
-  PYTHONPATH=src python -m benchmarks.serve_load --fault-plan --merge BENCH_PR7.json
+With ``--replica-fault`` the bench records the ``replica_faulted``
+stream: a ``replicas=2`` store under the same open loop, a
+:class:`FaultPlan` replica kill mid-traffic.  The bar is STRICTLY
+stronger than the shard-loss stream: failover inside the store must
+absorb the loss entirely — every future completes FULL (zero degraded
+results, ``allow_partial`` stays off), ``replica_failovers >= 1``, the
+background anti-entropy resync repairs the dead replica behind the
+traffic, and ``verify_replicas()`` asserts post-resync bit-parity.
+
+  PYTHONPATH=src python -m benchmarks.serve_load --fast --merge BENCH_PR8.json
+  PYTHONPATH=src python -m benchmarks.serve_load --fault-plan --merge BENCH_PR8.json
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python -m benchmarks.serve_load --replica-fault --merge BENCH_PR8.json
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
       PYTHONPATH=src python -m benchmarks.serve_load --smoke
 """
@@ -335,6 +346,137 @@ def run_faulted(n_requests: int, rate: float, n_store: int, dim: int,
     return record
 
 
+def run_replica_faulted(n_requests: int, rate: float, n_store: int, dim: int,
+                        nnz: int, k: int, r_block: int, s_block: int,
+                        window_s: float, seed: int, fault_at: int,
+                        algorithm: str = "iib"):
+    """Open loop over a ``replicas=2`` store with a replica kill at
+    dispatch ``fault_at``.
+
+    The acceptance bar is FULL SERVICE THROUGH THE LOSS: every submitted
+    request resolves complete — never degraded, never dropped — because
+    the store fails the dispatch over to the surviving replica inside
+    the batch (``allow_partial`` stays off; a degraded result would fail
+    the gate).  The scheduler's background anti-entropy resync
+    (``ServeConfig.resync``) repairs the dead replica from the host
+    mirror behind the traffic; ``verify_replicas()`` then asserts
+    bit-parity, and results must stay bit-identical to a single-device
+    index over the same rows.
+    """
+    import jax
+
+    from repro.core.engine import SparseKNNIndex
+    from repro.launch.mesh import make_store_mesh
+    from repro.runtime.fault import FaultPlan, FaultSpec
+
+    if jax.device_count() < 4:
+        raise SystemExit(
+            "replica fault bench needs >= 4 devices (2 replicas x 2 shards); "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=4")
+    S = synthetic_sparse(n_store, dim=dim, nnz_mean=nnz, seed=seed)
+    spec = JoinSpec(k=k, algorithm=algorithm, r_block=r_block, s_block=s_block)
+    store = ShardedKNNStore(S, spec, mesh=make_store_mesh(2, replicas=2))
+    single = SparseKNNIndex.build(S, spec)
+
+    pool, bounds, arrivals, ks = make_workload(
+        n_requests, rate, max_rows=4, k=k, dim=dim, nnz=nnz, seed=seed)
+    config = ServeConfig(
+        r_block=r_block, window_s=window_s,
+        queue_rows_hwm=4 * max(n_requests * 4, r_block),
+        resync=lambda: store.resync_replicas(),
+    )
+
+    # warm the compiled batch shape on BOTH replicas before arming the
+    # fault (replica kinds arm at at_dispatch and fire on the first
+    # dispatch routed to the target replica)
+    async def warm():
+        async with KNNScheduler(store, config) as sched:
+            for _ in range(2):
+                await asyncio.gather(*[
+                    sched.submit(slice_rows(pool, i, i + 1))
+                    for i in range(r_block)
+                ])
+
+    asyncio.run(warm())
+    store.fault_plan = FaultPlan(
+        [FaultSpec("replica_error", replica=1, at_dispatch=fault_at)])
+    lat, done_at, wall, bounces, metrics = asyncio.run(
+        open_loop(store, pool, bounds, arrivals, ks, config))
+    store.fault_plan = None
+    summary = metrics.summary()
+    faults = summary["faults"]
+
+    # the scheduler drain awaited the background resync; the dead replica
+    # must be repaired (or at least repairable) and bit-parity must hold
+    if store.needs_resync:
+        store.resync_replicas()
+    try:
+        replica_parity = bool(store.verify_replicas())
+    except ValueError:
+        replica_parity = False
+
+    # post-resync: a routed probe re-admits the half-open replica, and
+    # results must bit-match the single-device build over the same rows
+    sample_n = min(16, n_requests)
+    idxs = np.linspace(0, n_requests - 1, num=sample_n, dtype=int)
+    single_parity = True
+    for i in idxs:
+        rows = slice_rows(pool, int(bounds[i]), int(bounds[i + 1]))
+        got = store.query(rows)
+        want = single.query(rows)
+        if not (np.asarray(got.ids) == np.asarray(want.ids)).all():
+            single_parity = False
+            break
+        if not (np.asarray(got.scores) == np.asarray(want.scores)).all():
+            single_parity = False
+            break
+
+    record = {
+        "algorithm": algorithm,
+        "requests": n_requests,
+        "completed": summary["requests"]["completed"],
+        "failed": summary["requests"]["failed"],
+        "rejected_bounces": bounces,
+        "degraded": faults["degraded"],
+        "replica_failovers": faults["replica_failovers"],
+        "resyncs": faults["resyncs"],
+        "resync_s": faults["resync_s"],
+        "replica_dispatches": faults["replica_dispatches"],
+        "replica_losses": store.stats.replica_losses,
+        "dead_replicas_after": list(store.dead_replicas),
+        "replica_parity_ok": replica_parity,
+        "parity_vs_single_device": single_parity,
+        "query_index_builds": summary["dispatch"]["query_index_builds"],
+        "fault": {"kind": "replica_error", "replica": 1,
+                  "at_dispatch": fault_at},
+        "wall_s": round(wall, 4),
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+        "replicas": store.n_replicas,
+        "shards": store.n_shards,
+        "device_count": jax.device_count(),
+    }
+    return record
+
+
+def replica_faulted_checks(record: dict) -> dict:
+    return {
+        # full service through the replica loss: every future resolved
+        # complete, none degraded, none dropped
+        "zero_lost_futures_ok": (
+            record["completed"] == record["requests"]
+            and record["failed"] == 0),
+        "zero_degraded_ok": record["degraded"] == 0,
+        "failover_fired_ok": record["replica_failovers"] >= 1,
+        "replica_killed_ok": record["replica_losses"] >= 1,
+        "resynced_ok": (record["resyncs"] >= 1
+                        and not record["dead_replicas_after"]),
+        "replica_parity_ok": bool(record["replica_parity_ok"]),
+        "single_device_parity_ok": bool(record["parity_vs_single_device"]),
+        "zero_query_builds_ok": record["query_index_builds"] == 0,
+    }
+
+
 def faulted_checks(record: dict) -> dict:
     return {
         # zero lost futures: every submitted request resolved, none errored
@@ -380,6 +522,12 @@ def main(argv=None):
                     help="record the 'serving_faulted' stream: inject a "
                          "shard loss mid-traffic; every future must "
                          "complete (degraded or recovered, never dropped)")
+    ap.add_argument("--replica-fault", action="store_true",
+                    help="record the 'replica_faulted' stream: kill a "
+                         "replica of a replicas=2 store mid-traffic; every "
+                         "future must complete FULL (failover, not "
+                         "degradation) and the resynced replica must "
+                         "bit-match (needs >= 4 devices)")
     ap.add_argument("--fault-at", type=int, default=2,
                     help="store dispatch index the shard loss fires at")
     ap.add_argument("--requests", type=int, default=None)
@@ -394,6 +542,28 @@ def main(argv=None):
 
     if args.smoke:
         return smoke()
+
+    if args.replica_fault:
+        record = run_replica_faulted(
+            n_requests=args.requests or 256, rate=(args.requests or 256) / 0.2,
+            n_store=512, dim=2048, nnz=32, k=5, r_block=64, s_block=128,
+            window_s=0.002, seed=args.seed, fault_at=args.fault_at)
+        checks = replica_faulted_checks(record)
+        print(json.dumps({"replica_faulted": record, **checks}, indent=1))
+        if args.merge:
+            with open(args.merge) as f:
+                doc = json.load(f)
+            doc.setdefault("streams", {})["replica_faulted"] = record
+            with open(args.merge, "w") as f:
+                json.dump(doc, f, indent=1)
+                f.write("\n")
+            print(f"merged replica_faulted stream into {args.merge}")
+        elif args.out:
+            with open(args.out, "w") as f:
+                json.dump({"streams": {"replica_faulted": record}}, f, indent=1)
+                f.write("\n")
+            print(f"wrote {args.out}")
+        return 0 if all(checks.values()) else 1
 
     if args.fault_plan:
         record = run_faulted(

@@ -29,15 +29,44 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return compat.make_mesh((data, model), ("data", "model"))
 
 
-def make_store_mesh(num_shards: int | None = None):
-    """1-D ``('shard',)`` mesh for the sharded KNN datastore
-    (repro.store.ShardedKNNStore): one store shard per device.  Defaults to
-    every local device; pass ``num_shards`` to use a subset (e.g. a
-    single-shard store on a one-device host)."""
+def make_store_mesh(num_shards: int | None = None, replicas: int = 1):
+    """Mesh for the sharded KNN datastore (repro.store.ShardedKNNStore).
+
+    ``replicas=1`` (default): the 1-D ``('shard',)`` mesh — one store
+    shard per device, every local device unless ``num_shards`` picks a
+    subset.  ``replicas>1``: a 2-D ``('replica', 'shard')`` mesh — each
+    replica row holds a FULL copy of every shard (``replicas ×
+    num_shards`` devices), so reads fan out round-robin across replicas
+    and a replica loss is a routing decision, not data loss.
+    ``num_shards`` then defaults to ``devices // replicas``.
+    """
     n = len(jax.devices())
-    shards = n if num_shards is None else num_shards
-    assert 1 <= shards <= n, f"need {shards} devices, have {n}"
-    return compat.make_mesh((shards,), ("shard",))
+    assert replicas >= 1, f"replicas must be >= 1, got {replicas}"
+    if replicas == 1:
+        shards = n if num_shards is None else num_shards
+        assert 1 <= shards <= n, f"need {shards} devices, have {n}"
+        return compat.make_mesh((shards,), ("shard",))
+    shards = (n // replicas) if num_shards is None else num_shards
+    assert shards >= 1, f"{n} devices cannot host {replicas} replicas"
+    assert replicas * shards <= n, (
+        f"need {replicas}x{shards} devices, have {n}")
+    return compat.make_mesh((replicas, shards), ("replica", "shard"))
+
+
+def replica_submeshes(mesh, replica_axis: str = "replica") -> list:
+    """Split a replicated store mesh into one sub-mesh per replica, each
+    spanning that replica's devices over the remaining (shard) axes.  The
+    store compiles its fan-out per sub-mesh and routes whole dispatches to
+    one replica — there is no cross-replica collective on the query path,
+    which is exactly what lets a dead replica be routed around."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    names = list(mesh.axis_names)
+    ax = names.index(replica_axis)
+    shard_names = tuple(n for n in names if n != replica_axis)
+    devs = np.moveaxis(mesh.devices, ax, 0)
+    return [Mesh(devs[r], shard_names) for r in range(devs.shape[0])]
 
 
 def dp_axes(mesh) -> tuple:

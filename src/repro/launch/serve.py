@@ -200,6 +200,7 @@ def main(argv=None):
         "faults": {
             "rejected": rejected, "timeouts": timeouts,
             "retries": retries, "degraded": 0,
+            "replica_failovers": 0, "resyncs": 0,
         },
     }))
     return 0

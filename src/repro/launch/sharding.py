@@ -181,6 +181,45 @@ def store_put(tree, mesh: Mesh, axes):
     return jax.tree.map(lambda x, s: compat.shard_put(x, mesh, s), tree, specs)
 
 
+def store_shard_update(arr, i: int, new_slice) -> "jax.Array":
+    """Replace shard ``i``'s leading-axis slice of an already-placed store
+    stack IN PLACE of a full re-placement: only the devices whose buffer
+    covers row ``i`` receive new bytes (``device_put`` of the one-shard
+    slice); every other device keeps its existing buffer, and the pieces
+    reassemble into a new Array with the same sharding.  This is what
+    makes mutation placement O(changed shard), not O(store) — the
+    incremental-placement half of the ROADMAP's replication item.
+
+    ``new_slice`` must already be padded to the stack's cross-shard
+    maxima: shape ``(1,) + arr.shape[1:]``.  Callers that grew the global
+    geometry (more blocks, wider list bound) must fall back to a full
+    ``store_put`` — a stale-shaped buffer cannot be patched.
+    """
+    new_slice = np.asarray(new_slice)
+    if new_slice.shape != (1,) + arr.shape[1:]:
+        raise ValueError(
+            f"slice shape {new_slice.shape} does not match stack row "
+            f"{(1,) + arr.shape[1:]} — geometry changed, use store_put")
+    bufs = []
+    for s in arr.addressable_shards:
+        sl = s.index[0]
+        lo = 0 if sl.start is None else sl.start
+        hi = arr.shape[0] if sl.stop is None else sl.stop
+        if lo <= i < hi:
+            local = new_slice if hi - lo == 1 else None
+            if local is None:
+                # device holds several shard rows: patch row i inside its
+                # existing local buffer
+                local = np.asarray(s.data).copy()
+                local[i - lo] = new_slice[0]
+            bufs.append(jax.device_put(
+                jax.numpy.asarray(local, dtype=arr.dtype), s.device))
+        else:
+            bufs.append(s.data)
+    return jax.make_array_from_single_device_arrays(
+        arr.shape, arr.sharding, bufs)
+
+
 # ---------------------------------------------------------------------------
 # batch / cache specs
 # ---------------------------------------------------------------------------

@@ -47,11 +47,24 @@ class NonRetryableError(RuntimeError):
 class ShardLostError(RuntimeError):
     """A store shard failed mid-dispatch.  Carries the shard index so the
     store/scheduler can mark exactly that shard lost and either serve
-    degraded (``allow_partial``) or rebuild it from its checkpoint slice."""
+    degraded (``allow_partial``) or rebuild it from its checkpoint slice.
+    On a replicated store the loss is scoped to the dispatching replica's
+    COPY of the shard — the query fails over to another replica."""
 
     def __init__(self, shard: int, message: Optional[str] = None):
         super().__init__(message or f"shard {shard} lost")
         self.shard = shard
+
+
+class ReplicaLostError(RuntimeError):
+    """A whole store replica failed mid-dispatch (host down, device reset):
+    every shard copy it held is gone.  Carries the replica index so the
+    store's health tracker can mark it dead, fail the query over to a
+    healthy replica, and queue a full anti-entropy resync."""
+
+    def __init__(self, replica: int, message: Optional[str] = None):
+        super().__init__(message or f"replica {replica} lost")
+        self.replica = replica
 
 
 def guard_finite(name: str, value) -> None:
@@ -131,6 +144,13 @@ class FaultSpec:
         when the store's dispatch counter reaches ``at_dispatch``;
       * ``"wedge"`` — sleep ``wedge_s`` inside the dispatch at
         ``at_dispatch`` (drives the caller's ``with_timeout`` watchdog);
+      * ``"replica_error"`` — raise :class:`ReplicaLostError` for
+        ``replica``: ARMS at ``at_dispatch`` and fires on the first
+        armed dispatch actually ROUTED to that replica (a dead host
+        kills whatever lands on it next, not a dispatch that went
+        elsewhere);
+      * ``"replica_wedge"`` — sleep ``wedge_s`` on the first armed
+        dispatch routed to ``replica`` (a straggling replica);
       * ``"corrupt_leaf"`` — not dispatched-triggered; use
         :func:`corrupt_checkpoint_leaf` directly (kept here so a plan can
         be described declaratively in benches).
@@ -140,11 +160,13 @@ class FaultSpec:
     kind: str
     at_dispatch: int = 0
     shard: int = 0
+    replica: int = 0
     wedge_s: float = 0.0
     path: Optional[str] = None
 
     def __post_init__(self):
-        if self.kind not in ("shard_error", "wedge", "corrupt_leaf"):
+        if self.kind not in ("shard_error", "wedge", "replica_error",
+                             "replica_wedge", "corrupt_leaf"):
             raise ValueError(f"unknown fault kind: {self.kind!r}")
 
 
@@ -161,18 +183,108 @@ class FaultPlan:
         self.dispatches = 0
         self.fired: list = []
 
-    def on_dispatch(self) -> None:
+    def on_dispatch(self, replica: Optional[int] = None) -> None:
+        """``replica`` is the replica the store routed this dispatch to
+        (None on an unreplicated store).  shard_error/wedge fire exactly AT
+        their dispatch index; replica kinds arm at it and fire on the first
+        armed dispatch that actually lands on their target replica."""
         n = self.dispatches
         self.dispatches += 1
         for spec in self.specs:
-            if spec in self.fired or spec.at_dispatch != n:
+            if spec in self.fired:
                 continue
-            if spec.kind == "shard_error":
+            if spec.kind in ("shard_error", "wedge"):
+                if spec.at_dispatch != n:
+                    continue
                 self.fired.append(spec)
-                raise ShardLostError(spec.shard, f"injected at dispatch {n}")
-            if spec.kind == "wedge":
-                self.fired.append(spec)
+                if spec.kind == "shard_error":
+                    raise ShardLostError(spec.shard, f"injected at dispatch {n}")
                 time.sleep(spec.wedge_s)
+            elif spec.kind in ("replica_error", "replica_wedge"):
+                if n < spec.at_dispatch or replica != spec.replica:
+                    continue
+                self.fired.append(spec)
+                if spec.kind == "replica_error":
+                    raise ReplicaLostError(
+                        spec.replica, f"injected at dispatch {n}")
+                time.sleep(spec.wedge_s)
+
+
+class ReplicaHealth:
+    """Per-replica health state machine for the replicated store's router.
+
+    States (the classic circuit-breaker shape, DESIGN.md §10):
+
+    ``live`` ──(``fail_threshold`` CONSECUTIVE dispatch failures, or an
+    explicit ``mark_dead`` on data loss)──► ``dead`` ──(anti-entropy
+    resync re-placed its state: ``mark_resynced``)──► ``half_open``
+    ──(one successful probe dispatch: ``record_success``)──► ``live``;
+    a failed probe drops straight back to ``dead``.
+
+    A transient failure below the threshold keeps the replica live (its
+    consecutive counter resets on the next success); data-loss failures
+    (``ReplicaLostError``) bypass the threshold — a replica whose device
+    state is gone must not be routed to until resynced.  The tracker is
+    pure bookkeeping: the store decides what counts as a failure and when
+    a resync has happened.
+    """
+
+    LIVE, DEAD, HALF_OPEN = "live", "dead", "half_open"
+
+    def __init__(self, n: int, fail_threshold: int = 1):
+        if n < 1:
+            raise ValueError("need at least one replica")
+        if fail_threshold < 1:
+            raise ValueError("fail_threshold must be >= 1")
+        self.n = n
+        self.fail_threshold = int(fail_threshold)
+        self._state = [self.LIVE] * n
+        self._consecutive = [0] * n
+
+    def state(self, r: int) -> str:
+        return self._state[r]
+
+    def live(self):
+        return [r for r in range(self.n) if self._state[r] == self.LIVE]
+
+    def dead(self):
+        return [r for r in range(self.n) if self._state[r] == self.DEAD]
+
+    def half_open(self):
+        return [r for r in range(self.n) if self._state[r] == self.HALF_OPEN]
+
+    def record_failure(self, r: int) -> bool:
+        """One dispatch failure on replica ``r``.  Returns True when this
+        failure transitioned it to dead (threshold crossed, or a half-open
+        probe failed)."""
+        if self._state[r] == self.DEAD:
+            return False
+        self._consecutive[r] += 1
+        if (self._state[r] == self.HALF_OPEN
+                or self._consecutive[r] >= self.fail_threshold):
+            self._state[r] = self.DEAD
+            return True
+        return False
+
+    def mark_dead(self, r: int) -> bool:
+        """Unconditional kill (data loss).  Returns True if it was not
+        already dead."""
+        was = self._state[r] != self.DEAD
+        self._state[r] = self.DEAD
+        self._consecutive[r] = max(self._consecutive[r], self.fail_threshold)
+        return was
+
+    def mark_resynced(self, r: int) -> None:
+        """The replica's state has been re-placed; admit one probe."""
+        if self._state[r] == self.DEAD:
+            self._state[r] = self.HALF_OPEN
+
+    def record_success(self, r: int) -> None:
+        """A dispatch on ``r`` completed: clear the consecutive counter and
+        re-admit a half-open replica (the probe passed)."""
+        self._consecutive[r] = 0
+        if self._state[r] == self.HALF_OPEN:
+            self._state[r] = self.LIVE
 
 
 def corrupt_checkpoint_leaf(directory: str, step: Optional[int] = None,

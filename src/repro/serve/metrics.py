@@ -84,6 +84,11 @@ class ServeMetrics:
     recoveries: int = 0              # shard recoveries completed
     recovery_s: float = 0.0          # total wall time spent recovering
 
+    # replica routing counters (replicated stores; all zero otherwise)
+    replica_failovers: int = 0       # dispatches served by a backup replica
+    resyncs: int = 0                 # replica anti-entropy passes completed
+    resync_s: float = 0.0            # total wall time spent resyncing
+
     # store dispatch counters (summed JoinStats of every batch query)
     device_dispatches: int = 0
     host_syncs: int = 0
@@ -102,6 +107,7 @@ class ServeMetrics:
         self.latency = RollingWindow()        # submit → result, seconds
         self.batch_wall = RollingWindow()     # per-batch dispatch seconds
         self.occupancy = RollingWindow()      # live rows / r_block per batch
+        self.replica_dispatches: Dict[int, int] = {}  # replica → dispatches
         self._t0 = time.monotonic()
 
     # -- scheduler hooks -----------------------------------------------------
@@ -155,6 +161,17 @@ class ServeMetrics:
     def on_recovery(self, wall_s: float) -> None:
         self.recoveries += 1
         self.recovery_s += wall_s
+
+    def on_routing(self, failovers: int, dispatches: Dict[int, int]) -> None:
+        """One batch's replica-routing delta (replicated stores report
+        which replicas served it and whether failover kicked in)."""
+        self.replica_failovers += failovers
+        for r, n in dispatches.items():
+            self.replica_dispatches[r] = self.replica_dispatches.get(r, 0) + n
+
+    def on_resync(self, wall_s: float) -> None:
+        self.resyncs += 1
+        self.resync_s += wall_s
 
     # -- reporting -----------------------------------------------------------
 
@@ -210,6 +227,13 @@ class ServeMetrics:
                 "shard_losses": self.shard_losses,
                 "recoveries": self.recoveries,
                 "recovery_s": round(self.recovery_s, 4),
+                "replica_failovers": self.replica_failovers,
+                "resyncs": self.resyncs,
+                "resync_s": round(self.resync_s, 4),
+                "replica_dispatches": {
+                    str(r): n
+                    for r, n in sorted(self.replica_dispatches.items())
+                },
             },
             "dispatch": {
                 "device_dispatches": self.device_dispatches,

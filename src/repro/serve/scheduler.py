@@ -127,6 +127,12 @@ class ServeConfig:
                       ``allow_partial`` it runs in the background; without
                       it, batches that hit a lost shard await it and then
                       re-dispatch for FULL results (queued-behind-recovery).
+    ``resync``      — zero-arg callable that repairs diverged replicas
+                      (e.g. ``lambda: store.resync_replicas()``).  Kicked
+                      in the background whenever a completed batch leaves
+                      ``store.needs_resync`` true — replica failover keeps
+                      serving FULL results meanwhile, so unlike ``recover``
+                      nothing ever queues behind it.
     """
 
     r_block: Optional[int] = None
@@ -141,6 +147,7 @@ class ServeConfig:
     feature_bucket: int = 8
     allow_partial: bool = False
     recover: Optional[Callable[[], Any]] = None
+    resync: Optional[Callable[[], Any]] = None
 
 
 @dataclasses.dataclass
@@ -201,6 +208,7 @@ class KNNScheduler:
         self._dispatches: set = set()
         self._exec: Optional[concurrent.futures.ThreadPoolExecutor] = None
         self._recovering: Optional[asyncio.Task] = None
+        self._resyncing: Optional[asyncio.Task] = None
         self._seen_lost: set = set()
 
     # -- lifecycle -----------------------------------------------------------
@@ -386,9 +394,14 @@ class KNNScheduler:
 
     def _query_once(self, batch: SparseBatch):
         """Executor-side: one store dispatch under the batch watchdog.
-        Returns (ids, scores, JoinStats, index_builds_delta, missing_shards)
-        as host data."""
-        builds0 = getattr(getattr(self.store, "stats", None), "index_builds", 0)
+        Returns (ids, scores, JoinStats, index_builds_delta, missing_shards,
+        routing) as host data; ``routing`` is this dispatch's replica-level
+        delta — failovers and per-replica dispatch counts — for stores that
+        track them (empty otherwise)."""
+        st = getattr(self.store, "stats", None)
+        builds0 = getattr(st, "index_builds", 0)
+        fail0 = getattr(st, "replica_failovers", 0)
+        disp0 = dict(getattr(st, "replica_dispatches", ()) or {})
         kw = {}
         if self.config.allow_partial and hasattr(self.store, "lost_shards"):
             kw["allow_partial"] = True
@@ -396,9 +409,17 @@ class KNNScheduler:
             self.store.query, self.config.batch_timeout_s, batch, **kw)
         ids = np.asarray(res.ids)
         scores = np.asarray(res.scores)
-        builds1 = getattr(getattr(self.store, "stats", None), "index_builds", 0)
+        builds1 = getattr(st, "index_builds", 0)
         missing = tuple(getattr(res, "missing_shards", ()))
-        return ids, scores, res.stats, builds1 - builds0, missing
+        disp1 = dict(getattr(st, "replica_dispatches", ()) or {})
+        routing = {
+            "failovers": getattr(st, "replica_failovers", 0) - fail0,
+            "dispatches": {
+                r: disp1[r] - disp0.get(r, 0)
+                for r in disp1 if disp1[r] != disp0.get(r, 0)
+            },
+        }
+        return ids, scores, res.stats, builds1 - builds0, missing, routing
 
     def _kick_recovery(self) -> Optional[asyncio.Task]:
         """Start (or return the in-flight) background recovery task.  It
@@ -429,6 +450,35 @@ class KNNScheduler:
         task.add_done_callback(self._dispatches.discard)
         return task
 
+    def _kick_resync(self) -> Optional[asyncio.Task]:
+        """Start (or return the in-flight) background replica resync.  Same
+        discipline as ``_kick_recovery``: one slot, runs ``config.resync``
+        on the dispatch executor (never concurrent with a query), tracked
+        in ``_dispatches`` so ``stop()`` awaits it.  Nothing ever waits on
+        this task — failover serves FULL results while it runs."""
+        if self._resyncing is not None:
+            return self._resyncing
+        if self.config.resync is None:
+            return None
+
+        loop = asyncio.get_running_loop()
+
+        async def _run():
+            t0 = time.monotonic()
+            try:
+                await loop.run_in_executor(self._exec, self.config.resync)
+                self.metrics.on_resync(time.monotonic() - t0)
+            except Exception:  # noqa: BLE001 — a failed resync leaves the
+                pass           # replica dead; the next batch re-kicks
+            finally:
+                self._resyncing = None
+
+        task = asyncio.create_task(_run())
+        self._resyncing = task
+        self._dispatches.add(task)
+        task.add_done_callback(self._dispatches.discard)
+        return task
+
     async def _dispatch(self, reqs: List[_Pending], rows: int) -> None:
         loop = asyncio.get_running_loop()
         batch = self._assemble(reqs)
@@ -437,7 +487,8 @@ class KNNScheduler:
         recovery_waits = 0
         while True:
             try:
-                ids, scores, stats, builds, missing = await loop.run_in_executor(
+                (ids, scores, stats, builds, missing,
+                 routing) = await loop.run_in_executor(
                     self._exec, self._query_once, batch)
                 break
             except ShardLostError as e:
@@ -474,6 +525,11 @@ class KNNScheduler:
         wall = time.monotonic() - t0
         self.metrics.on_batch(rows, wall, stats)
         self.metrics.query_index_builds += builds
+        self.metrics.on_routing(routing["failovers"], routing["dispatches"])
+        if getattr(self.store, "needs_resync", False):
+            # a replica diverged (failover absorbed the failure — the batch
+            # above still completed FULL); repair it behind the traffic
+            self._kick_resync()
         if missing:
             # degraded delivery: flag every request in the batch and start
             # rebuilding the lost shards behind the traffic

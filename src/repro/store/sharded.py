@@ -1,5 +1,6 @@
 """ShardedKNNStore — build-once-per-shard indexes, fan-out query with
-on-device top-k reduction, delete/TTL tombstones (DESIGN.md §Sharded store).
+on-device top-k reduction, delete/TTL tombstones, replica failover
+(DESIGN.md §Sharded store, §10).
 
 The paper's algorithms are single-machine; serving one big S to heavy
 query traffic needs the standard distributed kNN-join decomposition
@@ -19,6 +20,24 @@ partition, merge per-partition top-k.  Here that becomes:
   sharded (``launch/sharding.store_stack_specs``) — shard i's stacks
   live on device i.
 
+* **Replicas** — ``make_store_mesh(..., replicas=)`` adds a ``replica``
+  axis; the store splits it into per-replica sub-meshes
+  (``launch/mesh.replica_submeshes``) and places the SAME stacks on each
+  (the host mirror is the single source of truth; device replicas are a
+  pure function of it).  Each fan-out dispatch routes to exactly one
+  replica — half-open probes first, then live clean replicas round-robin
+  (read scaling), dead replicas never — and a mid-dispatch
+  ``ShardLostError``/``ReplicaLostError`` fails over to the next healthy
+  replica WITHIN the same block, so callers see FULL results through a
+  replica loss.  Health is a circuit breaker per replica
+  (``runtime.fault.ReplicaHealth``); mutations write through to every
+  non-dead replica and queue per-replica dirty shard sets for dead ones;
+  :meth:`resync_replicas` is the anti-entropy pass that re-places the
+  missed slices and re-admits the replica half-open;
+  :meth:`verify_replicas` audits bit-parity.  With one replica all of
+  this is inert and the PR 7 degraded/queued-behind-recovery semantics
+  apply unchanged.
+
 * **Fan-out query** — ``query(R)`` prepares each R block's device inputs
   once (``engine.prepare_r_block_inputs``; they depend only on R and on
   build-frozen global statistics) and replicates them into ONE jitted
@@ -28,27 +47,33 @@ partition, merge per-partition top-k.  Here that becomes:
   TopKStates are tree-reduced on device (``core.topk.tree_reduce_topk``,
   whose merge body is the shared ``insert_candidates`` epilogue of
   kernels/topk_merge).  One device dispatch and one host sync (the result
-  pull) per R block — NOT per (R block, shard) — and zero query-time
-  index builds.  Results are bit-identical to a single-device
-  SparseKNNIndex over the concatenated S: shards hold ascending global-id
-  ranges and the reduction always puts the lower shard on the
-  tie-winning side, matching ``topk_update``'s first-offered-wins order.
+  pull) per R block — NOT per (R block, shard), and not per replica:
+  there is no cross-replica collective — and zero query-time index
+  builds.  Results are bit-identical to a single-device SparseKNNIndex
+  over the concatenated S: shards hold ascending global-id ranges and the
+  reduction always puts the lower shard on the tie-winning side, matching
+  ``topk_update``'s first-offered-wins order.
 
 * **Mutability** — ``add()`` appends a batch to the shard with the
   fewest live rows (balance policy), assigning fresh global ids and
-  re-assembling only that shard's tail blocks; ``delete(ids)`` and TTL
-  expiry (``add(..., ttl=)`` + ``expire(now)``) tombstone rows by
-  per-row valid masks folded into the scan (one host→device mask upload,
-  NO index rebuild); ``compact()`` — triggered automatically once a
-  shard's dead fraction crosses ``auto_compact`` — is the real rebuild
-  that reclaims tombstoned rows.  Global ids remain stable across all
-  mutations (each shard carries an explicit id stack, which is why the
-  scan joins take per-row ids rather than block offsets).  Once ``add()``
-  has landed a batch on a non-tail shard, global ids are no longer
-  ascending in shard order, so versus a single-device index built in
-  append order the scores stay exact but ids may differ where scores tie
-  EXACTLY (tie preference follows shard order; BF's zero-overlap 0.0
-  scores are the common case — IIB/IIIB mask those to -inf).
+  re-assembling only that shard's tail blocks; placement is INCREMENTAL
+  (``launch/sharding.store_shard_update``): while the padded stack
+  geometry is unchanged, only the touched shard's slice ships
+  host→device — ``StoreStats.placed_shards``/``placed_bytes`` make it
+  observable — and only a grown geometry (more blocks, wider bound)
+  re-places everything.  ``delete(ids)`` and TTL expiry (``add(...,
+  ttl=)`` + ``expire(now)``) tombstone rows by per-row valid masks folded
+  into the scan (one host→device mask upload, NO index rebuild);
+  ``compact()`` — triggered automatically once a shard's dead fraction
+  crosses ``auto_compact`` — is the real rebuild that reclaims
+  tombstoned rows.  Global ids remain stable across all mutations (each
+  shard carries an explicit id stack, which is why the scan joins take
+  per-row ids rather than block offsets).  Once ``add()`` has landed a
+  batch on a non-tail shard, global ids are no longer ascending in shard
+  order, so versus a single-device index built in append order the
+  scores stay exact but ids may differ where scores tie EXACTLY (tie
+  preference follows shard order; BF's zero-overlap 0.0 scores are the
+  common case — IIB/IIIB mask those to -inf).
 
 IIIB's MinPruneScore threshold evolves shard-locally (each shard's scan
 carries its own) — exactness is per-entry (Theorem 1 masks only entries
@@ -86,7 +111,7 @@ from repro.core.engine import (
 from repro.core.iib import iib_scan_join
 from repro.core.iiib import iiib_scan_join
 from repro.core.topk import TopKState, init_topk, tree_reduce_topk
-from repro.runtime.fault import ShardLostError
+from repro.runtime.fault import ReplicaHealth, ReplicaLostError, ShardLostError
 from repro.sparse.format import SparseBatch
 
 P = jax.sharding.PartitionSpec
@@ -101,7 +126,9 @@ class StoreStats:
     device_dispatches: int = 0   # jitted fan-out launches (one per R block)
     host_syncs: int = 0          # result pulls (one per R block)
     index_builds: int = 0        # per-shard S-block index constructions
-    stack_uploads: int = 0       # sharded stack (re)placements on the mesh
+    stack_uploads: int = 0       # placement events (full OR incremental)
+    placed_shards: int = 0       # per-(replica, shard) slices shipped
+    placed_bytes: int = 0        # bytes shipped host→device by placements
     build_wall_s: float = 0.0
     query_wall_s: float = 0.0
     deleted: int = 0             # rows tombstoned via delete()
@@ -109,10 +136,16 @@ class StoreStats:
     compactions: int = 0         # shard compactions (real rebuilds)
     saves: int = 0               # checkpoint commits (save / save_dirty)
     save_wall_s: float = 0.0
-    shard_losses: int = 0        # shards marked lost by a failed dispatch
+    shard_losses: int = 0        # shard copies marked lost by failures
     degraded_queries: int = 0    # queries served with shards missing
     recoveries: int = 0          # shards rebuilt from a checkpoint slice
     recovery_wall_s: float = 0.0
+    replica_losses: int = 0      # replicas marked dead (health transitions)
+    replica_failovers: int = 0   # blocks served by a non-first-choice replica
+    resyncs: int = 0             # replica anti-entropy re-placements
+    resync_wall_s: float = 0.0
+    replica_dispatches: Dict[int, int] = dataclasses.field(
+        default_factory=dict)  # fan-out attempts routed to each replica
 
 
 def _np_sparse_slice(idx, val, nnz, lo: int, hi: int, dim: int) -> SparseBatch:
@@ -129,9 +162,15 @@ class ShardedKNNStore:
     globally, so every shard uses the same algorithm and block geometry.
     ``axes`` names the mesh axis (or axes — they flatten into the shard
     ring) that S is partitioned over; defaults to a fresh 1-D ``('shard',)``
-    mesh over the local devices.  ``use_kernel`` / ``warm_start`` are
-    engine-only for now (the fused Pallas path and the sampled warm start
-    assume a single resident device) and are rejected here.
+    mesh over the local devices (``replicas=`` forwards to
+    ``make_store_mesh`` and adds the replica dimension).  A mesh axis
+    named ``'replica'`` that is NOT in ``axes`` becomes the replication
+    dimension.  ``replica_fail_threshold`` is the health tracker's
+    consecutive-failure circuit-breaker threshold (a single shard-copy
+    loss below it keeps the replica routable; a whole-replica loss kills
+    it immediately).  ``use_kernel`` / ``warm_start`` are engine-only for
+    now (the fused Pallas path and the sampled warm start assume a single
+    resident device) and are rejected here.
     """
 
     def __init__(
@@ -143,6 +182,8 @@ class ShardedKNNStore:
         num_shards: Optional[int] = None,
         auto_compact: float = 0.5,
         calibration=None,
+        replicas: int = 1,
+        replica_fail_threshold: int = 2,
         *,
         _row_ids: Optional[np.ndarray] = None,
         _alive: Optional[np.ndarray] = None,
@@ -165,12 +206,30 @@ class ShardedKNNStore:
         if mesh is None:
             from repro.launch.mesh import make_store_mesh
 
-            mesh = make_store_mesh(num_shards)
+            mesh = make_store_mesh(num_shards, replicas=replicas)
         self.mesh = mesh
+        names = tuple(mesh.axis_names)
         if axes is None:
-            axes = (mesh.axis_names[0],)
+            if "replica" in names:
+                axes = tuple(a for a in names if a != "replica")
+            else:
+                axes = (names[0],)
         self._axes = tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
         self.n_shards = int(np.prod([mesh.shape[a] for a in self._axes]))
+
+        # replica dimension: one sub-mesh (and one placed stack set) per
+        # replica; a single-replica store's "sub-mesh" is the mesh itself,
+        # so the unreplicated path is byte-for-byte the old one
+        if "replica" in names and "replica" not in self._axes:
+            from repro.launch.mesh import replica_submeshes
+
+            self._replica_meshes = replica_submeshes(mesh)
+        else:
+            self._replica_meshes = [mesh]
+        self.n_replicas = len(self._replica_meshes)
+        self.health = ReplicaHealth(
+            self.n_replicas, fail_threshold=replica_fail_threshold)
+
         self.spec = spec
         self.dim = S.dim
         self.tile = spec.tile
@@ -231,7 +290,12 @@ class ShardedKNNStore:
         # by the store (assembled sharded over the mesh below)
         self.shards: List[SparseKNNIndex] = []
         self._gids: List[np.ndarray] = []
-        self._lost: Set[int] = set()
+        # per-replica divergence tracking: shard copies whose device state
+        # failed (_lost) or missed a write-through while dead (_replica_dirty)
+        self._lost: List[Set[int]] = [set() for _ in range(self.n_replicas)]
+        self._replica_dirty: List[Set[int]] = [
+            set() for _ in range(self.n_replicas)]
+        self._rr = 0                    # round-robin cursor over clean replicas
         self.fault_plan = None          # FaultPlan hook, consulted per dispatch
         for i in range(self.n_shards):
             lo, hi = int(bounds[i]), int(bounds[i + 1])
@@ -260,8 +324,12 @@ class ShardedKNNStore:
         self._shard_arrays: List[Dict[str, np.ndarray]] = [
             self._assemble_shard(i) for i in range(self.n_shards)
         ]
+        self._stacks: List[Optional[Dict[str, jax.Array]]] = (
+            [None] * self.n_replicas)
+        self._stacked_host: Optional[Dict[str, np.ndarray]] = None
+        self._host_geometry: Optional[tuple] = None
         self._upload_stacks()
-        self._query_fns: Dict[int, callable] = {}
+        self._query_fns: Dict[Tuple[int, int], callable] = {}
         self.stats.build_wall_s += time.perf_counter() - t0
 
     # -- introspection -------------------------------------------------------
@@ -368,100 +436,185 @@ class ShardedKNNStore:
     def _shard_ids_valid(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
         """(B, s_block) global-id stack + valid mask of shard i (padding and
         tombstones folded in — the only arrays delete()/expire() touch).
-        A LOST shard's mask is all-false: degraded queries run the same
-        fan-out program, the dead shard just offers no candidates."""
+        Replica-local losses are NOT folded here — :meth:`_replica_valid`
+        zeroes the lost shards of one replica's copy at placement time, so
+        a shard lost on one replica still answers from the others."""
         shard = self.shards[i]
         b, sb = shard.num_blocks, self.s_block
         ids = np.zeros(b * sb, np.int32)
         ids[: shard.n_s] = self._gids[i]
         valid = np.arange(b * sb) < shard.n_s
         valid[: shard.n_s] &= shard._alive
-        if i in self._lost:
-            valid[:] = False
         return ids.reshape(b, sb), valid.reshape(b, sb)
 
-    def _upload_stacks(self):
-        """Pad the per-shard slices to common shapes, stack on a leading
-        shard axis, and place sharded over the mesh axes."""
-        from repro.launch.sharding import store_put
-
-        sb = self.s_block
+    def _padded_geometry(self) -> tuple:
+        """(b_max, width): the cross-shard padded stack geometry.  width is
+        the feature bound (bf) or the inverted-list bound (iib/iiib).  While
+        this is unchanged, a mutation's placement can be incremental."""
         b_max = max(s.num_blocks for s in self.shards)
-        arrays = self._shard_arrays
-        stacked: Dict[str, np.ndarray] = {}
+        if self.algorithm == "bf":
+            width = max(a["idx"].shape[2] for a in self._shard_arrays)
+        else:
+            width = max(a["rows"].shape[2] for a in self._shard_arrays)
+        return (b_max, width)
 
-        def pad_blocks(a: np.ndarray, fill) -> np.ndarray:
-            pad = b_max - a.shape[0]
+    def _padded_shard(self, i: int, b_max: int, width: int) -> Dict[str, np.ndarray]:
+        """Shard i's stack slice padded to the cross-shard maxima — one row
+        of the stacked host mirror (and the unit ``store_shard_update``
+        ships on the incremental placement path)."""
+        sb = self.s_block
+        a = self._shard_arrays[i]
+        out: Dict[str, np.ndarray] = {}
+
+        def pad_blocks(x: np.ndarray, fill) -> np.ndarray:
+            pad = b_max - x.shape[0]
             if pad == 0:
-                return a
+                return x
             return np.concatenate(
-                [a, np.full((pad,) + a.shape[1:], fill, a.dtype)]
+                [x, np.full((pad,) + x.shape[1:], fill, x.dtype)]
             )
 
         if self.algorithm == "bf":
-            f_max = max(a["idx"].shape[2] for a in arrays)
-            parts = {"idx": [], "val": [], "nnz": []}
-            for a in arrays:
-                idx2, val2 = a["idx"], a["val"]
-                if idx2.shape[2] < f_max:
-                    flat_i = idx2.reshape(-1, idx2.shape[2])
-                    flat_v = val2.reshape(-1, val2.shape[2])
-                    flat_i, flat_v = _pad_feature_axis(flat_i, flat_v, f_max, self.dim)
-                    idx2 = flat_i.reshape(idx2.shape[0], sb, f_max)
-                    val2 = flat_v.reshape(val2.shape[0], sb, f_max)
-                parts["idx"].append(pad_blocks(idx2, self.dim))
-                parts["val"].append(pad_blocks(val2, 0.0))
-                parts["nnz"].append(pad_blocks(a["nnz"], 0))
-            stacked = {k: np.stack(v) for k, v in parts.items()}
+            idx2, val2 = a["idx"], a["val"]
+            if idx2.shape[2] < width:
+                flat_i = idx2.reshape(-1, idx2.shape[2])
+                flat_v = val2.reshape(-1, val2.shape[2])
+                flat_i, flat_v = _pad_feature_axis(flat_i, flat_v, width, self.dim)
+                idx2 = flat_i.reshape(idx2.shape[0], sb, width)
+                val2 = flat_v.reshape(val2.shape[0], sb, width)
+            out["idx"] = pad_blocks(idx2, self.dim)
+            out["val"] = pad_blocks(val2, 0.0)
+            out["nnz"] = pad_blocks(a["nnz"], 0)
         else:
-            m_max = max(a["rows"].shape[2] for a in arrays)
-            parts = {"rows": [], "vals": [], "counts": []}
+            rows, vals = a["rows"], a["vals"]
+            pad = width - rows.shape[2]
+            if pad:
+                # a wider list bound is a pad, not a rebuild (sentinel
+                # rows scatter into the discard slot, zero values)
+                rows = np.concatenate(
+                    [rows, np.full(rows.shape[:2] + (pad,), sb, rows.dtype)],
+                    axis=2,
+                )
+                vals = np.concatenate(
+                    [vals, np.zeros(vals.shape[:2] + (pad, self.tile), vals.dtype)],
+                    axis=2,
+                )
+            out["rows"] = pad_blocks(rows, sb)
+            out["vals"] = pad_blocks(vals, 0.0)
+            out["counts"] = pad_blocks(a["counts"], 0)
             if self.algorithm == "iiib":
-                parts["mass"] = []
-            for a in arrays:
-                rows, vals = a["rows"], a["vals"]
-                pad = m_max - rows.shape[2]
-                if pad:
-                    # a wider list bound is a pad, not a rebuild (sentinel
-                    # rows scatter into the discard slot, zero values)
-                    rows = np.concatenate(
-                        [rows, np.full(rows.shape[:2] + (pad,), sb, rows.dtype)],
-                        axis=2,
-                    )
-                    vals = np.concatenate(
-                        [vals, np.zeros(vals.shape[:2] + (pad, self.tile), vals.dtype)],
-                        axis=2,
-                    )
-                parts["rows"].append(pad_blocks(rows, sb))
-                parts["vals"].append(pad_blocks(vals, 0.0))
-                parts["counts"].append(pad_blocks(a["counts"], 0))
-                if self.algorithm == "iiib":
-                    parts["mass"].append(pad_blocks(a["mass"], 0.0))
-            stacked = {k: np.stack(v) for k, v in parts.items()}
+                out["mass"] = pad_blocks(a["mass"], 0.0)
+        ids, valid = self._shard_ids_valid(i)
+        out["ids"] = pad_blocks(ids, 0)
+        out["valid"] = pad_blocks(valid, False)
+        return out
 
-        ids_parts, valid_parts = [], []
-        for i in range(self.n_shards):
-            ids, valid = self._shard_ids_valid(i)
-            ids_parts.append(pad_blocks(ids, 0))
-            valid_parts.append(pad_blocks(valid, False))
-        stacked["ids"] = np.stack(ids_parts)
-        stacked["valid"] = np.stack(valid_parts)
+    def _replica_valid(self, r: int) -> np.ndarray:
+        """Replica r's valid mask: the host truth with r's lost shard
+        copies zeroed (a degraded redrive on r must not read them)."""
+        v = self._stacked_host["valid"]
+        if not self._lost[r]:
+            return v
+        v = v.copy()
+        for i in self._lost[r]:
+            v[i] = False
+        return v
 
-        self._stacks = store_put(
-            {k: jnp.asarray(v) for k, v in stacked.items()}, self.mesh, self._axes
+    def _upload_stacks(self, shards: Optional[Set[int]] = None):
+        """Place the per-shard slices on every replica.
+
+        ``shards=None`` (build/recover/refreeze) re-stacks the host mirror
+        and fully re-places each replica.  ``shards={...}`` (add/compact)
+        is the incremental path: while the padded geometry is unchanged,
+        only the named shards' rows are patched into the host mirror and
+        shipped (``store_shard_update`` — per-shard buffers, not a full
+        re-place); a geometry change falls back to the full path.  Dead
+        replicas are skipped and accrue the touched shards in their dirty
+        set — :meth:`resync_replicas` replays them."""
+        geometry = self._padded_geometry()
+        incremental = (
+            shards is not None
+            and self._stacked_host is not None
+            and geometry == self._host_geometry
         )
+        b_max, width = geometry
+        if incremental:
+            touched = sorted(set(shards))
+            for i in touched:
+                p = self._padded_shard(i, b_max, width)
+                for k, v in p.items():
+                    self._stacked_host[k][i] = v
+            self._place(touched)
+        else:
+            padded = [
+                self._padded_shard(i, b_max, width) for i in range(self.n_shards)
+            ]
+            self._stacked_host = {
+                k: np.stack([p[k] for p in padded]) for k in padded[0]
+            }
+            self._host_geometry = geometry
+            self._place(None)
         self._num_blocks_stacked = b_max
         self.stats.stack_uploads += 1
         self._refresh_plan_stats()
         # compiled query fns survive uploads: the program depends on stack
         # geometry only through argument shapes, which jax.jit keys on
 
+    def _place(self, shards: Optional[Sequence[int]]):
+        """Write-through to every replica: full placement (``shards=None``)
+        or per-shard slice updates.  Dead replicas accrue dirty instead."""
+        touched = set(range(self.n_shards)) if shards is None else set(shards)
+        for r in range(self.n_replicas):
+            if self.health.state(r) == ReplicaHealth.DEAD:
+                self._replica_dirty[r] |= touched
+                continue
+            if shards is None or self._stacks[r] is None:
+                self._place_replica_full(r)
+            else:
+                self._place_replica_shards(r, sorted(touched))
+
+    def _place_replica_full(self, r: int):
+        from repro.launch.sharding import store_put
+
+        tree = {
+            k: jnp.asarray(v)
+            for k, v in self._stacked_host.items() if k != "valid"
+        }
+        tree["valid"] = jnp.asarray(self._replica_valid(r))
+        self._stacks[r] = store_put(tree, self._replica_meshes[r], self._axes)
+        self.stats.placed_shards += self.n_shards
+        self.stats.placed_bytes += sum(
+            int(v.size) * v.dtype.itemsize for v in tree.values())
+
+    def _place_replica_shards(self, r: int, shards: Sequence[int]):
+        from repro.launch.sharding import store_shard_update
+
+        st = dict(self._stacks[r])
+        valid = self._replica_valid(r)
+        for i in shards:
+            for k, host in self._stacked_host.items():
+                sl = valid[i:i + 1] if k == "valid" else host[i:i + 1]
+                st[k] = store_shard_update(st[k], i, sl)
+                self.stats.placed_bytes += (
+                    int(np.prod(sl.shape)) * np.dtype(st[k].dtype).itemsize)
+            self.stats.placed_shards += 1
+        self._stacks[r] = st
+
+    def _refresh_replica_valid(self, r: int):
+        """Re-place ONLY replica r's valid mask (tombstones / lost folds)."""
+        from repro.launch.sharding import store_put
+
+        new_valid = store_put(
+            jnp.asarray(self._replica_valid(r)),
+            self._replica_meshes[r], self._axes,
+        )
+        self._stacks[r] = dict(self._stacks[r], valid=new_valid)
+
     def _refresh_valid(self):
         """Tombstone fold: ONLY the valid mask re-uploads — no index arrays
         are touched, no tile index is rebuilt (``stats.index_builds`` is the
-        observable)."""
-        from repro.launch.sharding import store_put
-
+        observable).  Dead replicas are skipped (resync re-places the whole
+        valid leaf anyway)."""
         b_max = self._num_blocks_stacked
         valid_parts = []
         for i in range(self.n_shards):
@@ -470,19 +623,23 @@ class ShardedKNNStore:
             if pad:
                 valid = np.concatenate([valid, np.zeros((pad, self.s_block), bool)])
             valid_parts.append(valid)
-        new_valid = store_put(
-            jnp.asarray(np.stack(valid_parts)), self.mesh, self._axes
-        )
-        self._stacks = dict(self._stacks, valid=new_valid)
+        self._stacked_host["valid"] = np.stack(valid_parts)
+        for r in range(self.n_replicas):
+            if self.health.state(r) != ReplicaHealth.DEAD:
+                self._refresh_replica_valid(r)
 
     # -- fan-out query -------------------------------------------------------
 
-    def _query_fn(self, rb: int):
+    def _query_fn(self, rb: int, replica: int = 0):
         """The jitted shard_map program of one R block (cached per R-block
-        size): shard-local scanned join → on-device tree reduction."""
-        if rb in self._query_fns:
-            return self._query_fns[rb]
-        mesh, axes, nsh = self.mesh, self._axes, self.n_shards
+        size AND per replica sub-mesh): shard-local scanned join →
+        on-device tree reduction.  No cross-replica collective — each
+        replica's program spans only its own devices, which is what lets a
+        dead replica be routed around."""
+        key = (rb, replica)
+        if key in self._query_fns:
+            return self._query_fns[key]
+        mesh, axes, nsh = self._replica_meshes[replica], self._axes, self.n_shards
         k, dim, sb, tile = self.spec.k, self.dim, self.s_block, self.tile
         alg = self.algorithm
         rep = P()
@@ -542,8 +699,8 @@ class ShardedKNNStore:
                 in_specs=(rep, rep, rep, rep) + (shard,) * 6,
                 out_specs=(state_spec, rep, rep),
             )
-        self._query_fns[rb] = jax.jit(fn)
-        return self._query_fns[rb]
+        self._query_fns[key] = jax.jit(fn)
+        return self._query_fns[key]
 
     def _occupied_tiles_of(self, idx: np.ndarray) -> int:
         """Dim-tiles the given rows touch (the engine's planner statistic)."""
@@ -581,6 +738,49 @@ class ShardedKNNStore:
                     spec, occupied_tiles=self._occupied_tiles,
                     calibration=self.calibration)
 
+    def _route_order(self) -> List[int]:
+        """Replica preference for the next dispatch: half-open replicas
+        first (the resync probe — one success re-admits them), then live
+        replicas with no lost shard copies rotated round-robin (the read
+        scaling), then live replicas carrying losses (fewest first — they
+        serve degraded redrives only when nothing clean is left).  Dead
+        replicas never appear."""
+        clean = [r for r in self.health.live() if not self._lost[r]]
+        lossy = sorted(
+            (r for r in self.health.live() if self._lost[r]),
+            key=lambda r: (len(self._lost[r]), r),
+        )
+        if clean:
+            rot = self._rr % len(clean)
+            self._rr += 1
+            clean = clean[rot:] + clean[:rot]
+        return self.health.half_open() + clean + lossy
+
+    def _note_shard_failure(self, r: int, shard: int):
+        """A dispatch on replica r lost ITS COPY of ``shard`` (replicated
+        stores only): tombstone the copy, strike the replica's health, and
+        queue the shard for anti-entropy resync.  Crossing the circuit-
+        breaker threshold kills the whole replica (everything it holds is
+        suspect → all shards dirty)."""
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range")
+        if shard not in self._lost[r]:
+            self._lost[r].add(shard)
+            self._replica_dirty[r].add(shard)
+            self.stats.shard_losses += 1
+        if self.health.record_failure(r):
+            self.stats.replica_losses += 1
+            self._replica_dirty[r] = set(range(self.n_shards))
+        else:
+            self._refresh_replica_valid(r)
+
+    def _mark_replica_dead(self, r: int):
+        """Whole-replica loss (``ReplicaLostError``): bypass the failure
+        threshold, stop routing to r, and mark every shard copy dirty."""
+        if self.health.mark_dead(r):
+            self.stats.replica_losses += 1
+        self._replica_dirty[r] = set(range(self.n_shards))
+
     def query(
         self,
         R: SparseBatch,
@@ -591,30 +791,38 @@ class ShardedKNNStore:
 
         One device dispatch (the jitted fan-out program) and one host sync
         (the result pull) per R block, independent of the shard count.
+        Replicated stores route each block to ONE replica (see
+        ``_route_order``); a mid-dispatch ``ShardLostError``/
+        ``ReplicaLostError`` fails over to the next healthy replica within
+        the same block, so the caller still gets FULL, bit-identical
+        results — failover is invisible except in
+        ``stats.replica_failovers``.
 
-        ``allow_partial`` is the degraded serving mode: when a shard fails
-        mid-dispatch (or is already marked lost) the query proceeds over
-        the surviving shards — same fan-out program, the lost shards' valid
-        masks zeroed — and the result carries ``missing_shards``.  Without
-        it a lost shard raises :class:`ShardLostError` (callers recover()
-        first, then retry — the queued-behind-recovery policy).
+        ``allow_partial`` is the degraded serving mode: when no replica can
+        serve a full fan-out (unreplicated shard loss, or losses on every
+        live replica) the query proceeds over the best surviving copy —
+        same fan-out program, the lost shards' valid masks zeroed — and the
+        result carries ``missing_shards``.  Without it, a loss no replica
+        covers raises :class:`ShardLostError` (callers recover() first,
+        then retry — the queued-behind-recovery policy).
         """
         t_q = time.perf_counter()
         stats = stats if stats is not None else JoinStats()
         if R.dim != self.dim:
             raise ValueError(f"dim mismatch: store has {self.dim}, got {R.dim}")
-        if self._lost and not allow_partial:
+        glost = self.lost_shards
+        if glost and not allow_partial:
             raise ShardLostError(
-                min(self._lost),
-                f"shard(s) {sorted(self._lost)} lost; recover() or pass "
-                "allow_partial=True",
+                glost[0],
+                f"shard(s) {list(glost)} lost on every replica; recover() "
+                "or pass allow_partial=True",
             )
         n_r = R.num_vectors
         rb = min(self.spec.r_block or self.plan_for(R).r_block, n_r)
         out_scores, out_ids = [], []
+        served_missing: Set[int] = set()
         for r0 in range(0, n_r, rb):
             br, r_valid = _pad_block(R, r0, rb)
-            fn = self._query_fn(rb)
             if self.algorithm == "iib":
                 prep = prepare_r_block_inputs(br, "iib", self.tile)
             elif self.algorithm == "iiib":
@@ -622,14 +830,41 @@ class ShardedKNNStore:
                     br, "iiib", self.tile,
                     rank_np=self._rank_np, rank_dev=self._rank_dev,
                 )
-            # each injected ShardLostError marks one more shard lost and
-            # (in degraded mode) redrives this block over the survivors —
-            # bounded by the shard count, since a lost shard stays lost
+            # failover loop: every failure tombstones a shard copy or kills
+            # a replica, so attempts are bounded by the copy count.  On an
+            # UNREPLICATED store `tried` stays empty and this is exactly the
+            # PR 7 loop: mark lost, raise without allow_partial, redrive
+            # degraded with it.
+            tried: Set[int] = set()
+            last_err: Optional[Exception] = None
+            attempts = 0
             while True:
-                st = self._stacks
+                order = [r for r in self._route_order() if r not in tried]
+                if not order:
+                    exhausted = attempts > self.n_replicas * (self.n_shards + 2)
+                    if not allow_partial or exhausted:
+                        if isinstance(last_err, ShardLostError):
+                            raise last_err
+                        raise ShardLostError(
+                            0,
+                            "no live replica can serve a full fan-out; "
+                            "recover() or resync_replicas()",
+                        ) from last_err
+                    # degraded redrive: the best surviving copy answers with
+                    # its lost shards masked out
+                    tried.clear()
+                    order = self._route_order()
+                    if not order:
+                        raise ShardLostError(0, "all replicas dead") from last_err
+                r = order[0]
+                attempts += 1
+                self.stats.replica_dispatches[r] = (
+                    self.stats.replica_dispatches.get(r, 0) + 1)
+                st = self._stacks[r]
+                fn = self._query_fn(rb, r)
                 try:
                     if self.fault_plan is not None:
-                        self.fault_plan.on_dispatch()
+                        self.fault_plan.on_dispatch(replica=r)
                     if self.algorithm == "bf":
                         state = fn(
                             br.indices, br.values, br.nnz,
@@ -649,11 +884,26 @@ class ShardedKNNStore:
                             st["rows"], st["vals"], st["counts"], st["mass"],
                             st["ids"], st["valid"],
                         )
+                    self.health.record_success(r)
+                    if tried:
+                        self.stats.replica_failovers += 1
+                    served_missing |= self._lost[r]
                     break
                 except ShardLostError as e:
-                    self._mark_lost(e.shard)
-                    if not allow_partial:
+                    last_err = e
+                    if self.n_replicas == 1:
+                        self._mark_lost(e.shard)
+                        if not allow_partial:
+                            raise
+                    else:
+                        self._note_shard_failure(r, e.shard)
+                        tried.add(r)
+                except ReplicaLostError as e:
+                    if self.n_replicas == 1:
                         raise
+                    last_err = e
+                    self._mark_replica_dead(r)
+                    tried.add(r)
             if self.algorithm == "iiib":
                 stats.list_entries += int(np.asarray(kept).sum())
                 stats.min_prune_trace.append(np.asarray(thr))
@@ -681,7 +931,10 @@ class ShardedKNNStore:
         self.stats.queries += 1
         self.stats.device_dispatches += stats.device_dispatches
         self.stats.host_syncs += stats.host_syncs
-        missing = tuple(sorted(self._lost))
+        if self.n_replicas == 1:
+            missing = tuple(sorted(self._lost[0]))
+        else:
+            missing = tuple(sorted(served_missing))
         if missing:
             self.stats.degraded_queries += 1
         return JoinResult(
@@ -703,15 +956,19 @@ class ShardedKNNStore:
         the target shard's TAIL blocks rebuild their tile indexes (the
         engine's extend() semantics); the retained prefix and the other
         shards' index arrays are reused (padded if the list bound grew).
-        ``ttl`` attaches an expiry deadline ``now + ttl`` consumed by
-        :meth:`expire`.
+        Placement writes through to every live replica and is INCREMENTAL
+        while the padded stack geometry holds: only the target shard's
+        slice ships (``placed_shards`` grows by the replica count, not
+        replicas × shards).  ``ttl`` attaches an expiry deadline
+        ``now + ttl`` consumed by :meth:`expire`.
         """
         if S_new.dim != self.dim:
             raise ValueError(f"dim mismatch: store has {self.dim}, got {S_new.dim}")
         t0 = time.perf_counter()
-        candidates = [i for i in range(self.n_shards) if i not in self._lost]
+        glost = set(self.lost_shards)
+        candidates = [i for i in range(self.n_shards) if i not in glost]
         if not candidates:
-            raise ShardLostError(min(self._lost), "all shards lost")
+            raise ShardLostError(min(glost), "all shards lost")
         tgt = min(candidates, key=lambda i: self.shards[i].live_rows)
         deadline = None
         if ttl is not None:
@@ -724,7 +981,7 @@ class ShardedKNNStore:
         self._next_gid += n_new
         self._dirty.add(tgt)
         self._shard_arrays[tgt] = self._assemble_shard(tgt, from_block=from_block)
-        self._upload_stacks()
+        self._upload_stacks(shards={tgt})
         self.stats.build_wall_s += time.perf_counter() - t0
         return gids
 
@@ -763,8 +1020,9 @@ class ShardedKNNStore:
 
     def _maybe_compact(self) -> bool:
         """Compact shards over the dead-fraction threshold.  Returns True
-        when a compaction ran — its full stack upload already carries every
-        shard's fresh valid mask, so the caller skips _refresh_valid()."""
+        when a compaction ran — its stack upload already carries every
+        touched shard's fresh valid mask, so the caller skips
+        _refresh_valid()."""
         over = [
             i for i, s in enumerate(self.shards)
             if s.dead_rows and s.dead_rows / s.n_s >= self.auto_compact
@@ -777,7 +1035,8 @@ class ShardedKNNStore:
     def compact(self, shards: Optional[Sequence[int]] = None) -> int:
         """Physically reclaim tombstoned rows — the real rebuild that
         delete()/expire() defer.  Re-assembles only the compacted shards'
-        stack slices; global ids of surviving rows are unchanged (the store
+        stack slices (and, geometry permitting, re-places only those
+        slices); global ids of surviving rows are unchanged (the store
         owns the id map).  A fully-dead shard compacts to the engine's
         single tombstoned placeholder row (its id kept in the map, never
         offered) and becomes the balance policy's next add() target."""
@@ -798,7 +1057,13 @@ class ShardedKNNStore:
             self._shard_arrays[i] = self._assemble_shard(i)
         if changed:
             self.stats.compactions += len(changed)
-            self._upload_stacks()
+            # compaction tombstone state changed OTHER shards' masks never —
+            # but a shrunken b_max changes the geometry; _upload_stacks
+            # falls back to the full path in that case
+            self._upload_stacks(shards=set(changed))
+            # the incremental path patches only the compacted shards; every
+            # other shard's valid mask is already current (compaction only
+            # rewrites its own rows)
         self.stats.build_wall_s += time.perf_counter() - t0
         return removed
 
@@ -832,9 +1097,10 @@ class ShardedKNNStore:
     def _ckpt_tree(self) -> dict:
         """The persisted state: per-shard host mirrors (rows exactly as the
         engine holds them, tombstones included), tombstone/TTL masks, the
-        global-id stacks, and the frozen IIIB rank.  Device stacks, tile
-        indexes and planner statistics are NOT persisted — they are pure
-        functions of this tree and rebuild on load."""
+        global-id stacks, and the frozen IIIB rank.  ONE logical copy —
+        replicas are a placement property, not data (device stacks, tile
+        indexes and planner statistics are pure functions of this tree and
+        rebuild / fan out on load)."""
         tree = {}
         for i, shard in enumerate(self.shards):
             tree[self._shard_key(i)] = {
@@ -915,15 +1181,20 @@ class ShardedKNNStore:
         num_shards: Optional[int] = None,
         step: Optional[int] = None,
         calibration=None,
+        replicas: int = 1,
+        replica_fail_threshold: int = 2,
     ) -> "ShardedKNNStore":
         """Warm-restart a saved store: host mirrors, spec, frozen IIIB
         rank, id stacks and tombstone state come from the newest valid
         checkpoint (``step`` pins one); device stacks and tile indexes are
         rebuilt, elastically resharded onto whatever mesh the loader
-        passes.  Queries after load are bit-identical to the saved store
-        (concatenated row order — the tie-winning order — is preserved
-        across any contiguous re-split).  The manifest ``extra`` is exposed
-        as ``store.loaded_extra``.
+        passes.  ``replicas=`` fans the single persisted logical copy out
+        onto a replicated mesh — replication is a placement property, so a
+        save from an unreplicated store restores replicated (and vice
+        versa) without any on-disk difference.  Queries after load are
+        bit-identical to the saved store (concatenated row order — the
+        tie-winning order — is preserved across any contiguous re-split).
+        The manifest ``extra`` is exposed as ``store.loaded_extra``.
         """
         from repro.checkpoint import ckpt as _ckpt
 
@@ -963,6 +1234,7 @@ class ShardedKNNStore:
         store = cls(
             S, spec, mesh=mesh, axes=axes, num_shards=num_shards,
             auto_compact=float(meta["auto_compact"]), calibration=calibration,
+            replicas=replicas, replica_fail_threshold=replica_fail_threshold,
             _row_ids=np.concatenate([leaf(i, "gids") for i in range(n_saved)]),
             _alive=np.concatenate([leaf(i, "alive") for i in range(n_saved)]),
             _deadline=np.concatenate(
@@ -993,33 +1265,78 @@ class ShardedKNNStore:
 
     @property
     def lost_shards(self) -> Tuple[int, ...]:
-        return tuple(sorted(self._lost))
+        """Shards with NO readable copy: lost on every replica (a dead
+        replica counts as having lost everything it held).  These need
+        :meth:`recover` (checkpoint slices); replica-local losses don't
+        appear here — failover covers them until :meth:`resync_replicas`
+        repairs the copy."""
+        eff: Optional[Set[int]] = None
+        for r in range(self.n_replicas):
+            if self.health.state(r) == ReplicaHealth.DEAD:
+                l = set(range(self.n_shards))
+            else:
+                l = self._lost[r]
+            eff = set(l) if eff is None else (eff & l)
+        return tuple(sorted(eff))
 
-    def _mark_lost(self, i: int) -> None:
-        """Mark shard i failed: its valid mask zeroes (degraded queries see
-        no candidates from it) until :meth:`recover` rebuilds it."""
+    @property
+    def dead_replicas(self) -> Tuple[int, ...]:
+        return tuple(self.health.dead())
+
+    @property
+    def needs_resync(self) -> bool:
+        """True when some replica's device state diverges from the host
+        mirror (dead, dirty from missed write-throughs, or carrying lost
+        shard copies) — the scheduler's cue to kick
+        :meth:`resync_replicas` behind traffic.  Always False
+        unreplicated: a single-replica loss is data loss (recover())."""
+        if self.n_replicas == 1:
+            return False
+        return any(
+            self.health.state(r) == ReplicaHealth.DEAD
+            or self._replica_dirty[r] or self._lost[r]
+            for r in range(self.n_replicas)
+        )
+
+    def _mark_lost(self, i: int, replica: Optional[int] = None) -> None:
+        """Mark shard i failed on ``replica`` (default: EVERY replica —
+        data loss).  Its valid mask zeroes on the affected copies (degraded
+        queries see no candidates from them) until :meth:`recover`
+        (globally lost) or :meth:`resync_replicas` (replica-local)."""
         if not 0 <= i < self.n_shards:
             raise ValueError(f"shard {i} out of range")
-        if i not in self._lost:
-            self._lost.add(i)
+        targets = range(self.n_replicas) if replica is None else (replica,)
+        newly = False
+        for r in targets:
+            if i not in self._lost[r]:
+                self._lost[r].add(i)
+                self._replica_dirty[r].add(i)
+                newly = True
+        if newly:
             self.stats.shard_losses += 1
-            self._refresh_valid()
+            for r in targets:
+                if self.health.state(r) != ReplicaHealth.DEAD:
+                    self._refresh_replica_valid(r)
 
-    def mark_lost(self, i: int) -> None:
-        self._mark_lost(i)
+    def mark_lost(self, i: int, replica: Optional[int] = None) -> None:
+        self._mark_lost(i, replica=replica)
 
     def recover(self, directory: str, step: Optional[int] = None) -> Tuple[int, ...]:
-        """Rebuild every lost shard from its checkpoint slice and rejoin it
-        to the fan-out.  Reads ONLY the lost shards' leaves (sha-verified);
-        the surviving shards' state — including mutations since the save —
-        is untouched.  Mutations the lost shard took after the checkpoint
-        are gone (that is what 'lost' means); its global ids are stable
-        because the id stack is part of the slice.  Returns the recovered
+        """Rebuild every GLOBALLY lost shard from its checkpoint slice and
+        rejoin it to the fan-out.  Reads ONLY the lost shards' leaves
+        (sha-verified); the surviving shards' state — including mutations
+        since the save — is untouched.  Mutations the lost shard took
+        after the checkpoint are gone (that is what 'lost' means); its
+        global ids are stable because the id stack is part of the slice.
+        Replica-LOCAL losses are not recovered here (resync_replicas
+        repairs them from the host mirror) — but the full re-placement at
+        the end refreshes every live replica.  Returns the recovered
         shard indexes.
         """
         from repro.checkpoint import ckpt as _ckpt
 
-        if not self._lost:
+        glost = set(self.lost_shards)
+        if not glost:
             return ()
         t0 = time.perf_counter()
         if step is None:
@@ -1030,7 +1347,7 @@ class ShardedKNNStore:
         shard_spec = dataclasses.replace(
             self.spec, algorithm=self.algorithm, s_block=self.s_block
         )
-        for i in sorted(self._lost):
+        for i in sorted(glost):
             key = self._shard_key(i)
             arrays, extra = _ckpt.load_arrays(
                 directory, step, prefix=f"['{key}']"
@@ -1053,7 +1370,8 @@ class ShardedKNNStore:
             self.shards[i] = shard
             self._gids[i] = np.asarray(g("gids"), np.int32).copy()
             recovered.append(i)
-        self._lost.clear()
+        for r in range(self.n_replicas):
+            self._lost[r].difference_update(recovered)
         for i in recovered:
             # post-checkpoint mutations on the shard were lost with it, so
             # its in-memory state matches the slice we just read — but it
@@ -1065,3 +1383,66 @@ class ShardedKNNStore:
         self.stats.recoveries += len(recovered)
         self.stats.recovery_wall_s += time.perf_counter() - t0
         return tuple(recovered)
+
+    # -- replica resync (DESIGN.md §10) --------------------------------------
+
+    def resync_replicas(self) -> Tuple[int, ...]:
+        """Anti-entropy pass: re-place every diverged replica's device
+        state from the host mirror (the single source of truth every
+        replica's stacks are a pure function of) and re-admit dead
+        replicas HALF-OPEN — one successful probe dispatch returns them to
+        the rotation, a failed probe drops them straight back to dead.
+
+        Shape-stable divergence (missed write-throughs, lost shard copies)
+        re-places only the dirty shards' slices; a replica that missed a
+        geometry change gets a full re-placement.  No-op on an
+        unreplicated store: with one copy there is nothing to resync FROM
+        (that is :meth:`recover`'s job).  Returns the resynced replicas.
+        """
+        if self.n_replicas == 1:
+            return ()
+        t0 = time.perf_counter()
+        resynced = []
+        for r in range(self.n_replicas):
+            was_dead = self.health.state(r) == ReplicaHealth.DEAD
+            pending = self._replica_dirty[r] | self._lost[r]
+            if not was_dead and not pending:
+                continue
+            self._lost[r].clear()
+            self._replica_dirty[r].clear()
+            stale_shape = self._stacks[r] is None or any(
+                tuple(self._stacks[r][k].shape) != v.shape
+                for k, v in self._stacked_host.items()
+            )
+            if stale_shape or len(pending) >= self.n_shards:
+                self._place_replica_full(r)
+            else:
+                self._place_replica_shards(r, sorted(pending))
+                # divergence may include tombstone flips that happened while
+                # the replica was out — the valid leaf re-places wholesale
+                self._refresh_replica_valid(r)
+            if was_dead:
+                self.health.mark_resynced(r)
+            resynced.append(r)
+            self.stats.resyncs += 1
+        if resynced:
+            self.stats.resync_wall_s += time.perf_counter() - t0
+        return tuple(resynced)
+
+    def verify_replicas(self) -> bool:
+        """Bit-parity audit: every non-dead replica's device stacks must
+        equal the host mirror (index arrays, ids, and that replica's valid
+        fold).  Raises ``ValueError`` naming the first divergent
+        (replica, leaf); returns True when all replicas agree."""
+        for r in range(self.n_replicas):
+            if self.health.state(r) == ReplicaHealth.DEAD:
+                continue
+            for k, host in self._stacked_host.items():
+                want = jnp.asarray(
+                    self._replica_valid(r) if k == "valid" else host)
+                got = self._stacks[r][k]
+                if not np.array_equal(np.asarray(got), np.asarray(want)):
+                    raise ValueError(
+                        f"replica {r} leaf {k!r} diverges from the host "
+                        "mirror (resync_replicas() repairs this)")
+        return True

@@ -9,6 +9,8 @@ from repro.runtime.fault import (
     FaultPlan,
     FaultSpec,
     NonRetryableError,
+    ReplicaHealth,
+    ReplicaLostError,
     RetryPolicy,
     ShardLostError,
     Supervisor,
@@ -163,3 +165,75 @@ def test_fault_plan_wedge_sleeps_and_kind_validated():
     assert plan.fired
     with pytest.raises(ValueError, match="unknown fault kind"):
         FaultSpec("meteor_strike")
+
+
+def test_replica_lost_error_carries_replica():
+    e = ReplicaLostError(1)
+    assert e.replica == 1 and "replica 1" in str(e)
+    assert isinstance(e, RuntimeError)
+
+
+def test_fault_plan_replica_kind_arms_then_fires_on_target_replica():
+    """Replica kinds ARM at at_dispatch and fire on the first armed
+    dispatch routed to the target replica — routing is load-dependent, so
+    unlike shard kinds they cannot be pinned to an exact dispatch index."""
+    plan = FaultPlan([FaultSpec("replica_error", replica=1, at_dispatch=2)])
+    plan.on_dispatch(replica=1)              # dispatch 0: not armed yet
+    plan.on_dispatch(replica=1)              # dispatch 1: not armed yet
+    plan.on_dispatch(replica=0)              # dispatch 2: armed, wrong target
+    with pytest.raises(ReplicaLostError) as ei:
+        plan.on_dispatch(replica=1)          # dispatch 3: armed + target
+    assert ei.value.replica == 1
+    plan.on_dispatch(replica=1)              # spent: at most once
+    assert len(plan.fired) == 1
+
+
+def test_fault_plan_replica_wedge_sleeps():
+    plan = FaultPlan([FaultSpec("replica_wedge", replica=0, wedge_s=0.02)])
+    t0 = time.monotonic()
+    plan.on_dispatch(replica=0)
+    assert time.monotonic() - t0 >= 0.02
+    assert plan.fired
+
+
+def test_replica_health_circuit_breaker_threshold():
+    h = ReplicaHealth(2, fail_threshold=2)
+    assert h.live() == [0, 1] and h.state(0) == ReplicaHealth.LIVE
+    assert not h.record_failure(0)           # 1 of 2: still live
+    assert h.live() == [0, 1]
+    assert h.record_failure(0)               # 2 of 2: trips
+    assert h.state(0) == ReplicaHealth.DEAD
+    assert h.live() == [1] and h.dead() == [0]
+    assert not h.record_failure(0)           # already dead: no-op
+    # success resets the consecutive count of a live replica
+    h2 = ReplicaHealth(1, fail_threshold=2)
+    h2.record_failure(0)
+    h2.record_success(0)
+    assert not h2.record_failure(0)          # streak restarted
+
+
+def test_replica_health_half_open_probe_cycle():
+    h = ReplicaHealth(2, fail_threshold=1)
+    assert h.mark_dead(1)                    # unconditional kill
+    assert not h.mark_dead(1)                # idempotent
+    h.mark_resynced(1)
+    assert h.state(1) == ReplicaHealth.HALF_OPEN
+    assert h.half_open() == [1]
+    assert h.live() == [0]                   # half-open is NOT routable-live
+    h.record_success(1)                      # probe succeeded
+    assert h.state(1) == ReplicaHealth.LIVE
+    # a failed probe drops straight back to dead regardless of threshold
+    h.mark_dead(1)
+    h.mark_resynced(1)
+    assert h.record_failure(1)
+    assert h.state(1) == ReplicaHealth.DEAD
+
+
+def test_replica_health_validates():
+    with pytest.raises(ValueError):
+        ReplicaHealth(0)
+    with pytest.raises(ValueError):
+        ReplicaHealth(2, fail_threshold=0)
+    h = ReplicaHealth(2)
+    h.mark_resynced(0)                       # live: no-op, not half-open
+    assert h.state(0) == ReplicaHealth.LIVE

@@ -307,6 +307,36 @@ def test_batch_timeout_exhausts_and_fails_futures():
     asyncio.run(main())
 
 
+def test_stop_without_drain_fails_queued_but_completes_inflight():
+    """stop(drain=False) with a batch inside store.query(): the in-flight
+    batch still delivers (stop awaits dispatch tasks), but queued requests
+    that never made a batch fail immediately with a stopped error — and
+    the queue-depth gauge returns to zero, not negative."""
+    store = StubStore(sleep_s=0.3)
+
+    async def main():
+        cfg = ServeConfig(r_block=2, window_s=5.0)   # window parks request B
+        sched = await KNNScheduler(store, cfg).start()
+        a = asyncio.create_task(sched.submit(tiny_rows(2)))  # block-full flush
+        while not store.started.is_set():     # batch A inside query()
+            await asyncio.sleep(0.001)
+        b = asyncio.create_task(sched.submit(tiny_rows(1)))  # queued only
+        await asyncio.sleep(0.01)
+        assert sched.metrics.submitted == 2
+        await sched.stop(drain=False)
+        ids, scores = await a                 # in-flight batch delivered
+        assert ids.shape == (2, 4)
+        with pytest.raises(RuntimeError, match="stopped without drain"):
+            await b
+        assert store.calls == 1               # B never dispatched
+        assert sched.metrics.failed == 1
+        assert sched.metrics.completed == 1
+        assert sched.metrics.queue_depth == 0
+        assert sched.metrics.inflight == 0
+
+    asyncio.run(main())
+
+
 # ---------------------------------------------------------------------------
 # metrics + validation
 # ---------------------------------------------------------------------------

@@ -159,6 +159,62 @@ print('STORE_ADD_OK')
     assert "STORE_ADD_OK" in out
 
 
+def test_store_incremental_placement_counters():
+    """add() placement is incremental even with replicas=1: while the
+    padded stack geometry holds, only the touched shard's slice ships
+    host->device (placed_shards +1, a small fraction of the build's
+    bytes); tombstones move only the valid mask (no per-shard placement);
+    a geometry-growing add falls back to the full re-place.  Parity with
+    the single-device engine is held across all three paths."""
+    out = run_with_devices("""
+import numpy as np
+from repro.sparse.datagen import synthetic_sparse
+from repro.sparse.format import SparseBatch
+from repro.core.engine import SparseKNNIndex, JoinSpec
+from repro.store import ShardedKNNStore
+
+R = synthetic_sparse(20, dim=512, nnz_mean=18, seed=0)
+S = synthetic_sparse(131, dim=512, nnz_mean=18, seed=1)   # shards 33/33/33/32
+spec = JoinSpec(k=5, algorithm='bf', s_block=16, r_block=20)
+store = ShardedKNNStore.build(S, spec, num_shards=4)
+single = SparseKNNIndex.build(S, spec)
+assert store.stats.placed_shards == 4          # the build's full placement
+full_bytes = store.stats.placed_bytes
+
+def chunk(lo, hi):                             # sliced from S: same feature
+    return SparseBatch(indices=S.indices[lo:hi], values=S.values[lo:hi],
+                       nnz=S.nnz[lo:hi], dim=S.dim)   # width, no geometry bump
+
+# geometry-stable add: 4 rows land on shard 3 (32 -> 36 rows, still <= 3
+# blocks) -> exactly ONE shard slice ships, far below the full placement
+ps0, pb0 = store.stats.placed_shards, store.stats.placed_bytes
+store.add(chunk(0, 4)); single.extend(chunk(0, 4))
+assert store.stats.placed_shards - ps0 == 1, 'add re-placed untouched shards'
+assert (store.stats.placed_bytes - pb0) * 2 < full_bytes
+a, b = store.query(R), single.query(R)
+assert np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+assert np.array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+# tombstones: valid-mask-only upload, not a per-shard placement
+ps1 = store.stats.placed_shards
+store.delete([0]); single.delete([0])
+assert store.stats.placed_shards == ps1, 'delete re-placed index stacks'
+a, b = store.query(R), single.query(R)
+assert np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+# geometry growth (shard 0: 33 -> 49 rows, 3 -> 4 blocks) falls back to
+# the full path: every shard re-placed once
+ps2 = store.stats.placed_shards
+store.add(chunk(4, 20)); single.extend(chunk(4, 20))
+assert store.stats.placed_shards - ps2 == 4, 'geometry change must re-place all'
+a, b = store.query(R), single.query(R)
+assert np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+assert np.array_equal(np.asarray(a.scores), np.asarray(b.scores))
+print('STORE_PLACEMENT_OK')
+""", n_devices=4)
+    assert "STORE_PLACEMENT_OK" in out
+
+
 def test_store_refreeze_matches_and_multi_axis_mesh():
     """Store-level refreeze (global live-row rank) keeps results identical;
     the store also runs over a named axis of a larger existing mesh (the

@@ -205,6 +205,38 @@ print("OK")
     assert "OK" in out
 
 
+def test_recover_when_only_previous_step_survives():
+    """The newest commit is destroyed WHOLESALE (disk loss mid-replication,
+    not a detectable corrupt leaf): latest_step must resolve the previous
+    valid commit and recover() must rebuild the lost shard from it — the
+    shard rolls back to that commit's state, survivors keep their newer
+    mutations."""
+    code = _PRELUDE + r"""
+import os, shutil, tempfile
+from repro.checkpoint import ckpt
+
+d = tempfile.mkdtemp(prefix="dur_prevstep_")
+store = build("iib")
+store.save(d)                        # step 0: the eventual survivor
+r0 = store.query(R)
+store.add(synthetic_sparse(2, dim=DIM, nnz_mean=NNZ, seed=3))  # -> shard 0
+store.save(d)                        # step 1: newest commit
+assert ckpt.latest_step(d) == 1
+shutil.rmtree(os.path.join(d, "step_00000001"))
+assert ckpt.latest_step(d) == 0, "previous step did not survive"
+
+store.mark_lost(0)
+assert store.recover(d) == (0,)      # resolves the surviving step
+assert store.lost_shards == ()
+# shard 0 rolled back past its post-step-0 add; no other shard was
+# mutated, so the store is bitwise back at the step-0 state
+assert_parity(r0, store.query(R), "recover from previous step")
+print("OK")
+"""
+    out = run_with_devices(code, n_devices=4)
+    assert "OK" in out
+
+
 def test_corrupt_leaf_recovery_falls_back_to_previous_step():
     """A corrupt leaf in the newest commit is DETECTED (sha mismatch) and
     recovery/load fall back to the previous valid step — the recovered
