@@ -181,3 +181,101 @@ def gen(kind: str, n: int, seed: int, dim: int = 10_000, nnz: int = 120):
     if kind == "spectra":
         return spectra_like(n, dim=max(dim, 2000), peaks_mean=max(nnz // 2, 10), seed=seed)
     return synthetic_sparse(n, dim=dim, nnz_mean=nnz, seed=seed)
+
+
+def gen_clustered(n_clusters: int, per_cluster: int, dim: int, nnz: int,
+                  seed: int, noise: float = 0.05):
+    """Planted-neighbor workload for recall measurement: (R, S) where S
+    holds ``per_cluster`` noisy copies of each cluster center and R one
+    noisy probe per cluster, all on the center's support (cosine ~0.95+
+    within a cluster, near-orthogonal across).  Uniform random sparse data
+    has NO high-similarity neighbors — exact top-k there is an arbitrary
+    ranking of near-zero scores that no sublinear filter could (or should)
+    reproduce — so recall contracts are only meaningful on planted
+    structure with ``per_cluster >= k``."""
+    import jax.numpy as jnp
+
+    from repro.sparse.format import SparseBatch
+
+    rng = np.random.default_rng(seed)
+    cidx = np.stack([
+        np.sort(rng.choice(dim, size=nnz, replace=False))
+        for _ in range(n_clusters)
+    ]).astype(np.int32)
+    cval = rng.random((n_clusters, nnz)).astype(np.float32) + 0.5
+    cval /= np.linalg.norm(cval, axis=1, keepdims=True)
+
+    def noisy(c):
+        v = cval[c] + noise * rng.standard_normal(nnz).astype(np.float32)
+        return np.abs(v).astype(np.float32)
+
+    def batch(idx_rows, val_rows):
+        idx_rows, val_rows = np.stack(idx_rows), np.stack(val_rows)
+        return SparseBatch(
+            indices=jnp.asarray(idx_rows), values=jnp.asarray(val_rows),
+            nnz=jnp.asarray(np.full(len(idx_rows), nnz, np.int32)), dim=dim,
+        )
+
+    s_idx, s_val, r_idx, r_val = [], [], [], []
+    for c in range(n_clusters):
+        for _ in range(per_cluster):
+            s_idx.append(cidx[c])
+            s_val.append(noisy(c))
+        r_idx.append(cidx[c])
+        r_val.append(noisy(c))
+    return batch(r_idx, r_val), batch(s_idx, s_val)
+
+
+def run_approx_query(R, S, k, algorithm, target_recall=0.95, queries=3,
+                     r_block=None, s_block=None, store=False, num_shards=None):
+    """The approximate-tier serving shape: build one approx index (engine
+    or sharded store), verify its ``accuracy='exact'`` face is
+    bit-identical to an exact-built reference, then run the approx query
+    stream and measure recall / candidate fraction / dispatch shape /
+    query-time builds against that reference."""
+    from repro.core import lsh as lsh_mod
+
+    spec = _spec(R, S, k, algorithm, r_block, s_block)
+    aspec = dataclasses.replace(spec, accuracy="approx",
+                                target_recall=target_recall)
+    if store:
+        import jax
+
+        from repro.store import ShardedKNNStore
+
+        shards = min(num_shards or jax.device_count(), jax.device_count())
+        index = ShardedKNNStore.build(S, aspec, num_shards=shards)
+        ref = ShardedKNNStore.build(S, spec, num_shards=shards).query(R)
+    else:
+        index = SparseKNNIndex.build(S, aspec)
+        ref = SparseKNNIndex.build(S, spec).query(R)
+    builds0 = index.stats.index_builds
+    ex = index.query(R, accuracy="exact")
+    parity = (np.array_equal(np.asarray(ex.ids), np.asarray(ref.ids))
+              and np.allclose(np.asarray(ex.scores), np.asarray(ref.scores)))
+    index.query(R)  # warm compile
+    query_s, dispatches, syncs, cand_fracs = [], [], [], []
+    res = None
+    for _ in range(queries):
+        stats = JoinStats()
+        res, dt = timed(index.query, R, stats=stats)
+        query_s.append(round(dt, 4))
+        dispatches.append(stats.device_dispatches)
+        syncs.append(stats.host_syncs)
+        cand_fracs.append(round(stats.candidate_fraction, 4))
+    recall = lsh_mod.measured_recall(np.asarray(res.ids), np.asarray(ref.ids))
+    res.stats.recall = recall              # first-class JoinStats field
+    cfg = index._lsh.cfg
+    return {
+        "target_recall": target_recall,
+        "recall": round(recall, 4),
+        "candidate_fraction": max(cand_fracs),
+        "exact_parity_ok": parity,
+        "query_index_builds": index.stats.index_builds - builds0,
+        "query_s": query_s,
+        "device_dispatches": dispatches,
+        "host_syncs": syncs,
+        "index_builds": index.stats.index_builds,
+        "lsh_bands": cfg.n_bands,
+        "lsh_rows_per_band": cfg.rows_per_band,
+    }

@@ -36,16 +36,20 @@ def _load(path: str) -> dict:
 
 
 def _latest_pair() -> tuple:
-    """The two most recent BENCH_PR<n>.json records by PR number."""
+    """The two most recent BENCH_PR<n>.json records by PR number.  Only
+    ``BENCH_PR<n>.json`` names participate — the previous record is
+    resolved from what actually exists, never from a hard-coded default."""
 
     def pr_num(p):
         m = re.search(r"BENCH_PR(\d+)\.json$", p)
         return int(m.group(1)) if m else -1
 
-    records = sorted(glob.glob("BENCH_*.json"), key=pr_num)
+    records = sorted(
+        (p for p in glob.glob("BENCH_PR*.json") if pr_num(p) >= 0), key=pr_num
+    )
     if len(records) < 2:
         raise SystemExit(
-            f"need two BENCH_*.json records to compare, found {records}"
+            f"need two BENCH_PR<n>.json records to compare, found {records}"
         )
     return records[-2], records[-1]
 
@@ -154,11 +158,39 @@ def compare_replica_faulted(ns: dict, rows: list, failures: list) -> None:
                 f"{ns.get('resync_s')}")
 
 
+def compare_approx(name: str, ns: dict, rows: list, failures: list) -> None:
+    """Gate an ``approx_*`` stream (benchmarks/common.run_approx_query).
+
+    All bars are absolute (recall is measured against the exact reference
+    on a fixed-seed planted workload, so it is machine-independent):
+      * measured recall meets the stream's ``target_recall``,
+      * the candidate set is strictly sublinear (fraction < 1),
+      * zero query-time index builds (the band index is build-time state),
+      * the approx-built index's exact mode stays bit-identical to an
+        exact-built reference (the accuracy contract's default is intact).
+    """
+    absolute = {
+        "recall>=target": ns.get("recall", 0.0) >= ns.get("target_recall", 1.0),
+        "candidate_fraction<1": ns.get("candidate_fraction", 1.0) < 1.0,
+        "query_index_builds==0": ns.get("query_index_builds") == 0,
+        "exact_parity_ok": bool(ns.get("exact_parity_ok")),
+    }
+    for label, ok in absolute.items():
+        rows.append(f"  {name:12s} {label:28s} {'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(f"{name}.{label}")
+    rows.append(f"  {name:12s} {'recall/cand_frac (info)':28s} "
+                f"{ns.get('recall')} / {ns.get('candidate_fraction')}")
+
+
 def compare(old_path: str, new_path: str) -> int:
     old, new = _load(old_path), _load(new_path)
     failures = []
     rows = []
     for name, ns in new.get("streams", {}).items():
+        if name.startswith("approx"):
+            compare_approx(name, ns, rows, failures)
+            continue
         if name == "serving":
             compare_serving(ns, old.get("streams", {}).get(name), rows, failures)
             continue

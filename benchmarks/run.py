@@ -38,7 +38,10 @@ def smoke() -> int:
         or host syncs beyond the one per-R-block result pull (i.e. a
         per-pair host round-trip crept back in).
     """
-    from benchmarks.common import gen, run_repeated_query, run_store_query
+    from benchmarks.common import (
+        gen, gen_clustered, run_approx_query, run_repeated_query,
+        run_store_query,
+    )
 
     R = gen("synthetic", 96, seed=0, dim=2048, nnz=24)
     S = gen("synthetic", 160, seed=1, dim=2048, nnz=24)
@@ -68,6 +71,21 @@ def smoke() -> int:
     }
     ok &= all(c.values())
     checks["store"] = {"smoke": out, **c}
+    # approximate tier: recall bar + a strictly-sublinear candidate set +
+    # exact-mode bit-parity, on a planted-neighbor workload
+    # r_block << n_clusters: the candidate mask is a union over the R
+    # block's rows, so a block spanning every cluster would touch all of S
+    Rc, Sc = gen_clustered(24, per_cluster=8, dim=2048, nnz=24, seed=2)
+    out = run_approx_query(Rc, Sc, k=5, algorithm="iib", target_recall=0.95,
+                           queries=queries, r_block=6, s_block=64)
+    c = {
+        "approx_recall_ok": out["recall"] >= out["target_recall"],
+        "approx_candidates_sublinear": out["candidate_fraction"] < 1.0,
+        "approx_exact_parity_ok": out["exact_parity_ok"],
+        "approx_no_query_builds_ok": out["query_index_builds"] == 0,
+    }
+    ok &= all(c.values())
+    checks["approx"] = {"smoke": out, **c}
     print(json.dumps(checks))
     return 0 if ok else 1
 
@@ -79,7 +97,10 @@ def perf_record(fast: bool, out_path: str) -> int:
     path).  Machine-readable so successive PRs can be diffed."""
     import jax
 
-    from benchmarks.common import gen, run_repeated_query, run_store_query
+    from benchmarks.common import (
+        gen, gen_clustered, run_approx_query, run_repeated_query,
+        run_store_query,
+    )
 
     n_r, n_s, dim, nnz = (128, 512, 4096, 32) if fast else (256, 2048, 8192, 64)
     r_block, s_block, k, queries = n_r // 2, n_s // 4, 5, 3
@@ -110,6 +131,26 @@ def perf_record(fast: bool, out_path: str) -> int:
         print(f"{name}: query_s={streams[name]['query_s']} "
               f"dispatches={streams[name]['device_dispatches']} "
               f"shards={streams[name]['shards']}", flush=True)
+    # approximate-tier streams: recall + candidate fraction are measured on
+    # a planted-neighbor workload (uniform random sparse data has no
+    # high-similarity neighbors to recall — see gen_clustered)
+    n_cl = max(8, n_r // 4)
+    Rc, Sc = gen_clustered(n_cl, per_cluster=2 * k, dim=dim, nnz=nnz, seed=2)
+    # r_block << n_clusters keeps the per-block candidate union (the thing
+    # the filter saves) well below |S|
+    for name, kw in (
+        ("approx_iib", {"algorithm": "iib"}),
+        ("approx_iiib", {"algorithm": "iiib"}),
+        ("approx_store_iib", {"algorithm": "iib", "store": True}),
+    ):
+        streams[name] = run_approx_query(
+            Rc, Sc, k=k, target_recall=0.95, queries=queries,
+            r_block=max(4, n_cl // 4),
+            s_block=min(s_block, 2 * k * n_cl // 4), **kw,
+        )
+        print(f"{name}: recall={streams[name]['recall']} "
+              f"cand_frac={streams[name]['candidate_fraction']} "
+              f"parity={streams[name]['exact_parity_ok']}", flush=True)
 
     record = {
         "config": {

@@ -61,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import iiib as iiib_mod
+from repro.core import lsh as lsh_mod
 from repro.core.bf import bf_block_scores, bf_join_block, bf_scan_join
 from repro.core.iib import iib_join_block, iib_scan_join
 from repro.core.iiib import iiib_masked_block, iiib_scan_join
@@ -116,9 +117,24 @@ class JoinStats:
     host_syncs: int = 0            # device→host materializations on the query path
     build_wall_s: float = 0.0      # time spent inside build()/extend()
     query_wall_s: float = 0.0      # time spent inside query()
+    # approximate tier (accuracy="approx"): band-filter observability.
+    # ``recall`` is measured against an exact reference the engine does not
+    # have at query time — callers (benches, the recall-contract tests) fill
+    # it via ``lsh.measured_recall``; it stays None on exact queries.
+    recall: Optional[float] = None
+    candidate_rows: int = 0        # Σ live S rows surviving the band filter
+    scanned_rows: int = 0          # Σ live S rows the exact scan would visit
     # IIIB observability: per-R-block MinPruneScore traces ((s_blocks + 1,)
     # each: [seed, after block 0, ...]) — pulled with the result, no extra sync
     min_prune_trace: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+    @property
+    def candidate_fraction(self) -> Optional[float]:
+        """Fraction of live S rows the band filter let through (approx
+        queries only; None when no approximate block ran)."""
+        if self.scanned_rows == 0:
+            return None
+        return self.candidate_rows / self.scanned_rows
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,12 +149,28 @@ class JoinSpec:
     use_kernel: bool = False            # IIB: route scoring through the Pallas kernel
     warm_start: float = 0.0             # IIIB: S-sample fraction seeding MinPruneScore
     seed: int = 0                       # warm-start sampler seed (vary across a stream)
+    # approximate tier: accuracy="approx" builds a SimHash band index
+    # (core/lsh.py) whose candidate mask prunes S before the exact re-rank.
+    # Setting ``target_recall`` alone implies accuracy="approx"; the default
+    # accuracy="exact" is bit-identical to pre-LSH behaviour everywhere.
+    accuracy: str = "exact"             # exact | approx
+    target_recall: Optional[float] = None
 
     def __post_init__(self):
         if self.algorithm not in (None, "bf", "iib", "iiib"):
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
         if self.k < 1:
             raise ValueError("k must be >= 1")
+        if self.target_recall is not None and self.accuracy == "exact":
+            object.__setattr__(self, "accuracy", "approx")
+        if self.accuracy not in ("exact", "approx"):
+            raise ValueError(f"unknown accuracy {self.accuracy!r}")
+        if self.accuracy == "approx" and self.target_recall is None:
+            object.__setattr__(self, "target_recall", 0.95)
+        if self.target_recall is not None and not 0.0 < self.target_recall < 1.0:
+            raise ValueError(
+                f"target_recall must be in (0, 1), got {self.target_recall} "
+                "(use accuracy='exact' for exact results)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -414,6 +446,7 @@ class _KernelStack:
     col_valid: jax.Array  # (1, NS_pad) int32
     col_ids: jax.Array    # (1, NS_pad) int32 — global S ids per stacked column
     block_s: int          # kernel S-axis block (NS_pad % block_s == 0)
+    col_keys: Optional[jax.Array] = None  # (1, NS_pad, n_bands) int32 — approx tier
 
 
 @dataclasses.dataclass
@@ -426,6 +459,7 @@ class _SBlock:
     list_total: int = 0           # Σ list lengths of the block's tile index
     bound: int = 0                # host max_rows bound (IIB/IIIB stacking)
     tilemass: Optional[np.ndarray] = None  # (s_block, T) rank-permuted mass (IIIB)
+    lshkeys: Optional[np.ndarray] = None   # (s_block, n_bands) int32 band keys (approx)
 
 
 class SparseKNNIndex:
@@ -456,6 +490,7 @@ class SparseKNNIndex:
         cache_device_blocks: bool = True,
         frozen_rank: Optional[np.ndarray] = None,
         calibration=None,
+        lsh_cfg: Optional[lsh_mod.LSHConfig] = None,
     ):
         t0 = time.perf_counter()
         self.spec = spec
@@ -507,11 +542,20 @@ class SparseKNNIndex:
             self._rank_np = None
             self._rank_dev = None
 
+        # approximate tier: the SimHash band hasher is build-frozen state
+        # (like the IIIB rank) — the sharded store passes ``lsh_cfg`` so
+        # every shard/replica hashes with the SAME projections
+        self._lsh: Optional[lsh_mod.LSHBands] = None
+        if spec.accuracy == "approx":
+            cfg = lsh_cfg or lsh_mod.plan_lsh(spec.target_recall, seed=spec.seed)
+            self._lsh = lsh_mod.LSHBands(cfg, self.dim)
+
         self._blocks: List[_SBlock] = []
         self._bf_stack: Optional[_BFStack] = None
         self._iib_stack: Optional[_IIBStack] = None
         self._kernel_stack: Optional[_KernelStack] = None
         self._mass_stack: Optional[jax.Array] = None   # (B, s_block, T) — IIIB
+        self._lsh_stack: Optional[jax.Array] = None    # (B, s_block, n_bands)
         self._build_blocks(from_block=0)
         self.stats.build_wall_s += time.perf_counter() - t0
 
@@ -525,10 +569,11 @@ class SparseKNNIndex:
         cache_device_blocks: bool = True,
         frozen_rank: Optional[np.ndarray] = None,
         calibration=None,
+        lsh_cfg: Optional[lsh_mod.LSHConfig] = None,
     ) -> "SparseKNNIndex":
         return cls(
             S, spec, cache_device_blocks=cache_device_blocks,
-            frozen_rank=frozen_rank, calibration=calibration,
+            frozen_rank=frozen_rank, calibration=calibration, lsh_cfg=lsh_cfg,
         )
 
     def extend(self, S_new: SparseBatch, deadline=None) -> "SparseKNNIndex":
@@ -635,6 +680,7 @@ class SparseKNNIndex:
         self._iib_stack = None
         self._kernel_stack = None
         self._mass_stack = None
+        self._lsh_stack = None
         self._build_blocks(from_block=0)
         self.stats.build_wall_s += time.perf_counter() - t0
         return removed
@@ -698,6 +744,10 @@ class SparseKNNIndex:
         )
         host = SparseBatch(indices=idx, values=val, nnz=nnz, dim=self.dim)
         blk = _SBlock(host=host, valid=valid, start=start)
+        if self._lsh is not None:
+            # band keys are per-row build-time state like the tilemass:
+            # padded rows hash to key 0 and are excluded by the valid mask
+            blk.lshkeys = self._lsh.keys_host(idx, val)
         if self.algorithm == "iib" and not self.spec.use_kernel:
             # the max_rows shape bound (host, cheap); streaming reuses it
             # per pair, cached mode to size the common stack
@@ -726,6 +776,21 @@ class SparseKNNIndex:
         else:  # iiib: superset tile indexes + tilemass, stacked like IIB
             self._iib_stack = self._stack_iib(from_block, rank=self._rank_dev)
             self._mass_stack = self._stack_mass(from_block)
+        if self._lsh is not None and not (
+            self.spec.use_kernel and self.algorithm == "iib"
+        ):
+            self._lsh_stack = self._stack_lshkeys(from_block)
+
+    def _stack_lshkeys(self, from_block: int) -> jax.Array:
+        """(B, s_block, n_bands) stacked band keys; prefix retained across
+        extend (mirrors ``_stack_mass`` — a key stack is per-row data, so
+        tail-only reassembly carries over unchanged)."""
+        parts = []
+        if from_block > 0 and self._lsh_stack is not None:
+            parts.append(self._lsh_stack[:from_block])
+        for blk in self._blocks[from_block:]:
+            parts.append(jnp.asarray(blk.lshkeys)[None])
+        return jnp.concatenate(parts, axis=0)
 
     def _stack_ids_valid(self) -> Tuple[jax.Array, jax.Array]:
         """(B, s_block) global-id stack + valid mask (padding AND alive)."""
@@ -888,12 +953,20 @@ class SparseKNNIndex:
             np.arange(ns_pad) < self.n_s, np.arange(ns_pad, dtype=np.int32), -1
         )
         col_valid = col_valid.astype(np.int32)
+        col_keys = None
+        if self._lsh is not None:
+            # flat column layout of the kernel stack: band keys follow it
+            # (alignment-pad columns key 0, already masked by col_valid)
+            keys = np.zeros((ns_pad, self._lsh.cfg.n_bands), np.int32)
+            keys[:ns] = np.concatenate([b.lshkeys for b in self._blocks])
+            col_keys = jnp.asarray(keys[None])
         return _KernelStack(
             s_tiles=s_tiles,
             s_occ=s_occ,
             col_valid=jnp.asarray(col_valid[None, :]),
             col_ids=jnp.asarray(col_ids[None, :]),
             block_s=bs_k,
+            col_keys=col_keys,
         )
 
     # -- introspection ------------------------------------------------------
@@ -939,7 +1012,27 @@ class SparseKNNIndex:
 
     # -- query --------------------------------------------------------------
 
-    def query(self, R: SparseBatch, stats: Optional[JoinStats] = None) -> JoinResult:
+    def _r_band_keys(
+        self, R: SparseBatch, r0: int, rb: int, r_valid: np.ndarray,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """One R block's band keys (rb, n_bands) plus the real-row mask —
+        padded AND empty rows (nnz = 0, e.g. the serve scheduler's batch
+        padding) are excluded from the candidate union."""
+        stop = min(r0 + rb, R.num_vectors)
+        keys = np.zeros((rb, self._lsh.cfg.n_bands), np.int32)
+        keys[: stop - r0] = self._lsh.keys_host(
+            np.asarray(R.indices[r0:stop]), np.asarray(R.values[r0:stop])
+        )
+        real = r_valid.copy()
+        real[: stop - r0] &= np.asarray(R.nnz[r0:stop]) > 0
+        return keys, real
+
+    def query(
+        self,
+        R: SparseBatch,
+        stats: Optional[JoinStats] = None,
+        accuracy: Optional[str] = None,
+    ) -> JoinResult:
         """R ⋈_KNN S against the cached structures.  Returns global S ids.
 
         The R-block loop is the paper's Algorithm 1 outer loop.  With cached
@@ -949,12 +1042,27 @@ class SparseKNNIndex:
         host sync is the per-R-block result pull.  Streaming mode falls back
         to the legacy per-pair loop (transient device blocks, per-pair
         threshold syncs for IIIB).
+
+        ``accuracy`` overrides the spec per query: ``"approx"`` (index must
+        be built with ``target_recall``) prepends ONE jitted band-lookup
+        pass per R block whose candidate mask folds into the scans' valid
+        masks — the exact drivers then re-rank only the candidates.
+        ``"exact"`` on an approx-built index skips the mask entirely and is
+        bit-identical to an exact-built index.
         """
         t_q = time.perf_counter()
         stats = stats if stats is not None else JoinStats()
         if R.dim != self.dim:
             raise ValueError(f"dim mismatch: index has {self.dim}, got {R.dim}")
         spec = self.spec
+        acc = accuracy if accuracy is not None else spec.accuracy
+        if acc not in ("exact", "approx"):
+            raise ValueError(f"unknown accuracy {acc!r}")
+        approx = acc == "approx"
+        if approx and self._lsh is None:
+            raise ValueError(
+                "index was built without the LSH band tier; build with "
+                "target_recall (or accuracy='approx') to enable approx queries")
         algorithm = self.algorithm
         k = spec.k
         n_r, n_s = R.num_vectors, self.n_s
@@ -996,16 +1104,57 @@ class SparseKNNIndex:
                 stats.device_dispatches += 1
 
             n_valid = min(rb, n_r - r0)          # real rows of this R block
+
+            # approximate tier: ONE jitted band-lookup pass prunes S to a
+            # candidate mask the exact drivers re-rank (the mask ANDs into
+            # the same valid masks tombstones use — scan programs unchanged)
+            cand = None        # device (B, s_block) — cached scan paths
+            cand_np = None     # host (B, s_block) — streaming paths
+            col_cand = None    # device (1, NS_pad) — fused kernel path
+            cand_count = None  # device scalar, pulled with the result
+            if approx:
+                r_keys, r_real = self._r_band_keys(R, r0, rb, r_valid)
+                if cached and spec.use_kernel and algorithm == "iib":
+                    ks = self._kernel_stack
+                    col_cand, cand_count = lsh_mod.candidate_mask(
+                        jnp.asarray(r_keys), jnp.asarray(r_real),
+                        ks.col_keys[0], ks.col_valid[0] != 0,
+                    )
+                    col_cand = col_cand[None]
+                    stats.device_dispatches += 1
+                    stats.scanned_rows += self.live_rows
+                elif cached:
+                    live = self._sampled_valid(sampled_mask)
+                    cand, cand_count = lsh_mod.candidate_mask(
+                        jnp.asarray(r_keys), jnp.asarray(r_real),
+                        self._lsh_stack, jnp.asarray(live),
+                    )
+                    stats.device_dispatches += 1
+                    stats.scanned_rows += int(live.sum())
+                else:
+                    # streaming mode keeps S host-resident: host mask twin
+                    live = self._sampled_valid(sampled_mask)
+                    cand_np = lsh_mod.candidate_mask_host(
+                        r_keys, r_real,
+                        np.stack([blk.lshkeys for blk in self._blocks]),
+                    )
+                    stats.scanned_rows += int(live.sum())
+                    stats.candidate_rows += int((cand_np & live).sum())
+
             if algorithm == "bf":
                 if cached:
-                    state = self._query_bf_scanned(state, br, stats, rb)
+                    state = self._query_bf_scanned(state, br, stats, rb, cand)
                 else:
-                    state = self._query_pairs(state, br, None, None, stats, rb)
+                    state = self._query_pairs(
+                        state, br, None, None, stats, rb, cand_np
+                    )
             elif algorithm == "iib":
                 if spec.use_kernel and cached:
                     # the fused kernel derives its own (r-block, s-block)
                     # active lists from row occupancy
-                    state = self._query_fused_kernel(state, br, stats, rb, n_valid)
+                    state = self._query_fused_kernel(
+                        state, br, stats, rb, n_valid, col_cand
+                    )
                 else:
                     # R-side prep (active tiles are host-concrete — true
                     # tile skipping); shared with the sharded store
@@ -1014,12 +1163,12 @@ class SparseKNNIndex:
                     )
                     if cached:
                         state = self._query_iib_scanned(
-                            state, prep["r_tiles"], prep["tiles"], stats
+                            state, prep["r_tiles"], prep["tiles"], stats, cand
                         )
                     else:
                         state = self._query_pairs(
                             state, br, prep.get("r_tiles"), prep["tiles"],
-                            stats, rb,
+                            stats, rb, cand_np,
                         )
             else:  # iiib — masked superset refinement, threshold in carry
                 prep = prepare_r_block_inputs(
@@ -1029,11 +1178,12 @@ class SparseKNNIndex:
                 rv = jnp.asarray(r_valid)
                 if cached:
                     state, aux = self._query_iiib_scanned(
-                        state, r_tiles, mwt, tiles, stats, sampled_mask, rv
+                        state, r_tiles, mwt, tiles, stats, sampled_mask, rv, cand
                     )
                 else:
                     state = self._query_pairs_iiib(
-                        state, r_tiles, mwt, tiles, stats, sampled_mask, rv
+                        state, r_tiles, mwt, tiles, stats, sampled_mask, rv,
+                        cand_np,
                     )
 
             out_scores.append(np.asarray(state.scores)[r_valid])
@@ -1042,6 +1192,9 @@ class SparseKNNIndex:
                 # rides home with the result pull — same sync point
                 stats.list_entries += int(np.asarray(aux["kept"]).sum())
                 stats.min_prune_trace.append(np.asarray(aux["thr"]))
+            if cand_count is not None:
+                stats.candidate_rows += int(np.asarray(cand_count))
+                stats.host_syncs += 1          # the candidate-count pull
             stats.host_syncs += 1                          # the R block's result pull
 
         dt = time.perf_counter() - t_q
@@ -1055,22 +1208,24 @@ class SparseKNNIndex:
 
     # -- scanned drivers (cached mode: one dispatch per R block) -------------
 
-    def _query_bf_scanned(self, state, br, stats, rb):
+    def _query_bf_scanned(self, state, br, stats, rb, cand=None):
         st = self._bf_stack
         b = len(self._blocks)
+        valid = st.valid if cand is None else jnp.logical_and(st.valid, cand)
         state = bf_scan_join(
-            state, br, st.idx, st.val, st.nnz, st.ids, st.valid, dim=self.dim
+            state, br, st.idx, st.val, st.nnz, st.ids, valid, dim=self.dim
         )
         stats.device_dispatches += 1
         stats.blocks += b
         stats.dense_pairs += rb * self.s_block * b
         return state
 
-    def _query_iib_scanned(self, state, r_tiles, tiles, stats):
+    def _query_iib_scanned(self, state, r_tiles, tiles, stats, cand=None):
         st = self._iib_stack
         b = len(self._blocks)
+        valid = st.valid if cand is None else jnp.logical_and(st.valid, cand)
         state = iib_scan_join(
-            state, r_tiles, tiles, st.rows, st.vals, st.counts, st.ids, st.valid,
+            state, r_tiles, tiles, st.rows, st.vals, st.counts, st.ids, valid,
             tile=self.tile, num_s=self.s_block,
         )
         stats.device_dispatches += 1
@@ -1099,7 +1254,9 @@ class SparseKNNIndex:
         v[: hi - blk.start] &= self._alive[blk.start:hi]
         return v
 
-    def _query_iiib_scanned(self, state, r_tiles, mwt, tiles, stats, sampled_mask, rv):
+    def _query_iiib_scanned(
+        self, state, r_tiles, mwt, tiles, stats, sampled_mask, rv, cand=None
+    ):
         """IIIB's whole S side as ONE dispatch: the superset-index scan with
         (TopKState, MinPruneScore) in the carry.  The warm-started threshold
         seeds the carry as a device scalar — no host sync before the scan —
@@ -1108,10 +1265,13 @@ class SparseKNNIndex:
         st = self._iib_stack
         b = len(self._blocks)
         thr0 = min_prune_score(state, valid=rv)   # device scalar — warm start included
+        s_valid = jnp.asarray(self._sampled_valid(sampled_mask))
+        if cand is not None:
+            s_valid = jnp.logical_and(s_valid, cand)
         state, _, thr_trace, kept = iiib_scan_join(
             state, thr0, r_tiles, mwt, tiles,
             st.rows, st.vals, st.counts, self._mass_stack, st.ids,
-            jnp.asarray(self._sampled_valid(sampled_mask)), rv,
+            s_valid, rv,
             tile=self.tile, num_s=self.s_block,
         )
         stats.device_dispatches += 1
@@ -1120,7 +1280,7 @@ class SparseKNNIndex:
         # trace = [seed, after block 0, ..., after block B-1]  (B+1 values)
         return state, {"thr": jnp.concatenate([thr0[None], thr_trace]), "kept": kept}
 
-    def _query_fused_kernel(self, state, br, stats, rb, n_valid):
+    def _query_fused_kernel(self, state, br, stats, rb, n_valid, col_cand=None):
         """One fused score→top-k kernel call covers every S block: scores
         stream tile-by-tile through VMEM, never materializing in HBM.  The
         carried state's MinPruneScore seeds the kernel threshold, which
@@ -1140,8 +1300,11 @@ class SparseKNNIndex:
         r_occ = _host_row_occupancy(np.asarray(br.indices), self.dim, self.tile)
         active = jnp.asarray(active_lists(r_occ, ks.s_occ, br_k, ks.block_s))
         init_s, init_i = pad_state(state, r_tiles.shape[1])
+        col_valid = ks.col_valid
+        if col_cand is not None:
+            col_valid = col_valid * col_cand.astype(jnp.int32)
         out_s, out_i, _ = knn_topk_pallas(
-            r_tiles, ks.s_tiles, active, ks.col_valid, ks.col_ids, init_s, init_i,
+            r_tiles, ks.s_tiles, active, col_valid, ks.col_ids, init_s, init_i,
             thr=thr, nr_valid=jnp.full((1,), n_valid, jnp.int32),
             block_r=br_k, block_s=ks.block_s, interpret=_interpret_kernels(),
         )
@@ -1153,7 +1316,7 @@ class SparseKNNIndex:
 
     # -- per-pair loops (streaming mode) -------------------------------------
 
-    def _query_pairs(self, state, br, r_tiles, tiles, stats, rb):
+    def _query_pairs(self, state, br, r_tiles, tiles, stats, rb, cand_np=None):
         """The legacy Algorithm-1 inner loop for BF/IIB: one step per
         (B_r, B_s) pair with transient device blocks (O(block) memory)."""
         spec = self.spec
@@ -1161,10 +1324,12 @@ class SparseKNNIndex:
         sb = self.s_block
         tile = self.tile
 
-        for blk in self._blocks:
+        for bi, blk in enumerate(self._blocks):
             s0 = blk.start
             bs = _device_batch(blk.host)      # transient, per pair
             bv = self._block_valid(blk)
+            if cand_np is not None:
+                bv = bv & cand_np[bi]
             s_valid = jnp.asarray(bv)
             s_off = jnp.int32(s0)
             stats.blocks += 1
@@ -1200,7 +1365,9 @@ class SparseKNNIndex:
                 stats.device_dispatches += 2
         return state
 
-    def _query_pairs_iiib(self, state, r_tiles, mwt, tiles, stats, sampled_mask, rv):
+    def _query_pairs_iiib(
+        self, state, r_tiles, mwt, tiles, stats, sampled_mask, rv, cand_np=None
+    ):
         """Streaming IIIB: the same masked-superset step as the scan, driven
         per pair — the superset index materializes transiently per (B_r,
         B_s) pair (legacy O(block) device-memory profile) and the threshold
@@ -1209,6 +1376,8 @@ class SparseKNNIndex:
         removes the rebuilds and the syncs)."""
         tile = self.tile
         s_valid = self._sampled_valid(sampled_mask)
+        if cand_np is not None:
+            s_valid = s_valid & cand_np
 
         for bi, blk in enumerate(self._blocks):
             bs = _device_batch(blk.host)

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.knn_score.kernel import knn_score_pallas
-from repro.sparse.format import SparseBatch, num_tiles
+from repro.sparse.format import SparseBatch
 
 
 def _pad_rows(x: jax.Array, block: int) -> jax.Array:

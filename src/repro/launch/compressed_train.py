@@ -14,11 +14,7 @@ the exact-sync trainer.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Tuple
-
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat

@@ -23,9 +23,9 @@ from repro.checkpoint.ckpt import CheckpointManager, latest_step, restore
 from repro.configs.base import get_config
 from repro.data.pipeline import TokenPipeline
 from repro.launch.mesh import make_host_mesh
-from repro.launch.sharding import batch_shardings, opt_shardings, param_shardings
+from repro.launch.sharding import opt_shardings, param_shardings
 from repro.launch.steps import StepOptions, init_train_state, make_train_step
-from repro.runtime.fault import NonRetryableError, RetryPolicy, Supervisor, guard_finite
+from repro.runtime.fault import RetryPolicy, Supervisor, guard_finite
 
 
 def build(cfg, mesh, opts: StepOptions, total_steps: int):

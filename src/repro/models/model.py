@@ -11,7 +11,7 @@ stubs: frames (B,T_enc,d) for audio, patches (B,P,d) for vlm.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

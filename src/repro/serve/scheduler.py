@@ -159,6 +159,7 @@ class _Pending:
     k: int
     t_submit: float
     t_deadline: Optional[float]          # absolute monotonic, or None
+    accuracy: Optional[str]              # per-request override, or None (store default)
     future: asyncio.Future
 
 
@@ -256,12 +257,19 @@ class KNNScheduler:
     # -- submission ----------------------------------------------------------
 
     async def submit(self, rows: SparseBatch, k: Optional[int] = None,
-                     deadline: Optional[float] = None
+                     deadline: Optional[float] = None,
+                     accuracy: Optional[str] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
         """Admit one request; resolves to ``(ids, scores)`` of shape
         ``(n_rows, k)``.  ``deadline`` is a latency budget in seconds from
         now — it *pressures* the flush policy; a missed deadline is still
         delivered (and counted in ``metrics.deadline_misses``).
+
+        ``accuracy`` is the per-request knob over an approx-built store:
+        ``"approx"`` routes through the band-filtered fan-out, ``"exact"``
+        through the byte-identical exact program, ``None`` takes the
+        store's default.  Coalescing only packs same-accuracy requests
+        into a batch (one store dispatch serves one accuracy).
 
         Raises :class:`QueueFull` past the high-water mark — the caller
         should back off ``retry_after_s`` and resubmit.
@@ -270,6 +278,12 @@ class KNNScheduler:
             raise RuntimeError("scheduler is not running (use `async with`)")
         if rows.dim != self.dim:
             raise ValueError(f"dim mismatch: store has {self.dim}, got {rows.dim}")
+        if accuracy not in (None, "exact", "approx"):
+            raise ValueError(f"unknown accuracy {accuracy!r}")
+        if accuracy == "approx" and getattr(self.store, "_lsh", None) is None:
+            raise ValueError(
+                "store was built without the LSH band tier; build with "
+                "target_recall to serve approx requests")
         n = rows.num_vectors
         if n == 0:
             return ServeResult(np.empty((0, k or self.k_max), np.int32),
@@ -293,6 +307,7 @@ class KNNScheduler:
             nnz=np.asarray(rows.nnz, np.int32),
             k=k, t_submit=now,
             t_deadline=None if deadline is None else now + float(deadline),
+            accuracy=accuracy,
             future=asyncio.get_running_loop().create_future(),
         )
         self._next_rid += 1
@@ -363,6 +378,8 @@ class KNNScheduler:
             n = len(self._pending[0].nnz)
             if taken and rows + n > self.r_block:
                 break  # head-of-line request starts the next batch
+            if taken and self._pending[0].accuracy != taken[0].accuracy:
+                break  # one dispatch serves one accuracy — next batch
             req = self._pending.popleft()
             taken.append(req)
             rows += n
@@ -392,7 +409,7 @@ class KNNScheduler:
         return SparseBatch(indices=jnp.asarray(idx), values=jnp.asarray(val),
                            nnz=jnp.asarray(nnz), dim=self.dim)
 
-    def _query_once(self, batch: SparseBatch):
+    def _query_once(self, batch: SparseBatch, accuracy: Optional[str] = None):
         """Executor-side: one store dispatch under the batch watchdog.
         Returns (ids, scores, JoinStats, index_builds_delta, missing_shards,
         routing) as host data; ``routing`` is this dispatch's replica-level
@@ -405,6 +422,8 @@ class KNNScheduler:
         kw = {}
         if self.config.allow_partial and hasattr(self.store, "lost_shards"):
             kw["allow_partial"] = True
+        if accuracy is not None:
+            kw["accuracy"] = accuracy
         res = with_timeout(
             self.store.query, self.config.batch_timeout_s, batch, **kw)
         ids = np.asarray(res.ids)
@@ -482,6 +501,7 @@ class KNNScheduler:
     async def _dispatch(self, reqs: List[_Pending], rows: int) -> None:
         loop = asyncio.get_running_loop()
         batch = self._assemble(reqs)
+        accuracy = reqs[0].accuracy  # _start_batch packs one accuracy per batch
         t0 = time.monotonic()
         delays = iter(self.config.retry.delays())
         recovery_waits = 0
@@ -489,7 +509,7 @@ class KNNScheduler:
             try:
                 (ids, scores, stats, builds, missing,
                  routing) = await loop.run_in_executor(
-                    self._exec, self._query_once, batch)
+                    self._exec, self._query_once, batch, accuracy)
                 break
             except ShardLostError as e:
                 # allow_partial=False policy: queue this batch behind shard

@@ -93,6 +93,7 @@ import numpy as np
 
 from repro import compat
 from repro.core import iiib as iiib_mod
+from repro.core import lsh as lsh_mod
 from repro.core.bf import bf_scan_join
 from repro.core.engine import (
     JoinResult,
@@ -191,6 +192,7 @@ class ShardedKNNStore:
         _next_gid: Optional[int] = None,
         _frozen_rank: Optional[np.ndarray] = None,
         _shard_sizes: Optional[Sequence[int]] = None,
+        _lsh_cfg: Optional[dict] = None,
     ):
         # The underscored keywords are the checkpoint-restore channel used
         # by :meth:`load`: per-row state (global ids, tombstone masks, TTL
@@ -282,6 +284,16 @@ class ShardedKNNStore:
                 self._rank_np = iiib_mod.s_frequency_rank(freq)
             self._rank_dev = jnp.asarray(self._rank_np)
 
+        # approximate tier: ONE LSHConfig (and projection) shared by every
+        # shard and replica — identical band keys everywhere.  A restored
+        # store takes the SAVED config (``_lsh_cfg``) so keys round-trip
+        # even if the planner changes between versions.
+        self._lsh: Optional[lsh_mod.LSHBands] = None
+        if spec.accuracy == "approx":
+            cfg = (lsh_mod.LSHConfig(**_lsh_cfg) if _lsh_cfg is not None
+                   else lsh_mod.plan_lsh(spec.target_recall, seed=spec.seed))
+            self._lsh = lsh_mod.LSHBands(cfg, self.dim)
+
         shard_spec = dataclasses.replace(
             spec, algorithm=self.algorithm, s_block=self.s_block
         )
@@ -303,6 +315,7 @@ class ShardedKNNStore:
                 _np_sparse_slice(idx, val, nnz, lo, hi, self.dim), shard_spec,
                 cache_device_blocks=False, frozen_rank=self._rank_np,
                 calibration=self.calibration,
+                lsh_cfg=self._lsh.cfg if self._lsh is not None else None,
             )
             if _alive is not None:
                 shard._alive = np.asarray(_alive[lo:hi], bool).copy()
@@ -329,7 +342,7 @@ class ShardedKNNStore:
         self._stacked_host: Optional[Dict[str, np.ndarray]] = None
         self._host_geometry: Optional[tuple] = None
         self._upload_stacks()
-        self._query_fns: Dict[Tuple[int, int], callable] = {}
+        self._query_fns: Dict[Tuple[int, int, bool], callable] = {}
         self.stats.build_wall_s += time.perf_counter() - t0
 
     # -- introspection -------------------------------------------------------
@@ -431,6 +444,13 @@ class ShardedKNNStore:
             out["counts"] = np.stack(counts)
             if self.algorithm == "iiib":
                 out["mass"] = np.stack(mass)
+        if self._lsh is not None:
+            # band keys are per-row build state like the tilemass: the
+            # retained prefix carries over, only tail blocks re-hash
+            keys = [b.lshkeys for b in shard._blocks[from_block:]]
+            if old is not None:
+                keys = list(old["lshk"][:from_block]) + keys
+            out["lshk"] = np.stack(keys)
         return out
 
     def _shard_ids_valid(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -504,6 +524,9 @@ class ShardedKNNStore:
             out["counts"] = pad_blocks(a["counts"], 0)
             if self.algorithm == "iiib":
                 out["mass"] = pad_blocks(a["mass"], 0.0)
+        if self._lsh is not None:
+            # pad blocks key 0: excluded by the valid mask, never by key
+            out["lshk"] = pad_blocks(a["lshk"], 0)
         ids, valid = self._shard_ids_valid(i)
         out["ids"] = pad_blocks(ids, 0)
         out["valid"] = pad_blocks(valid, False)
@@ -630,13 +653,20 @@ class ShardedKNNStore:
 
     # -- fan-out query -------------------------------------------------------
 
-    def _query_fn(self, rb: int, replica: int = 0):
+    def _query_fn(self, rb: int, replica: int = 0, approx: bool = False):
         """The jitted shard_map program of one R block (cached per R-block
-        size AND per replica sub-mesh): shard-local scanned join →
-        on-device tree reduction.  No cross-replica collective — each
-        replica's program spans only its own devices, which is what lets a
-        dead replica be routed around."""
-        key = (rb, replica)
+        size AND per replica sub-mesh AND per accuracy): shard-local
+        scanned join → on-device tree reduction.  No cross-replica
+        collective — each replica's program spans only its own devices,
+        which is what lets a dead replica be routed around.
+
+        ``approx`` compiles a variant whose locals prepend the band-lookup
+        pass: the replicated R band keys membership-test each shard's
+        ``lshk`` stack (``lsh.band_hits``) and the candidate mask ANDs
+        into the shard's valid mask — still ONE dispatch per R block; the
+        live-candidate counts ride back via ``all_gather``.  Exact-mode
+        programs are keyed separately and byte-identical to before."""
+        key = (rb, replica, approx)
         if key in self._query_fns:
             return self._query_fns[key]
         mesh, axes, nsh = self._replica_meshes[replica], self._axes, self.n_shards
@@ -646,7 +676,7 @@ class ShardedKNNStore:
         shard = P(axes)
         state_spec = TopKState(scores=rep, ids=rep)
 
-        if alg == "bf":
+        if alg == "bf" and not approx:
             def local(bi, bv, bn, s_idx, s_val, s_nnz, s_ids, s_valid):
                 br = SparseBatch(indices=bi, values=bv, nnz=bn, dim=dim)
                 state = init_topk(rb, k)
@@ -661,7 +691,28 @@ class ShardedKNNStore:
                 in_specs=(rep, rep, rep) + (shard,) * 5,
                 out_specs=state_spec,
             )
-        elif alg == "iib":
+        elif alg == "bf":
+            def local(bi, bv, bn, rk, rr,
+                      s_idx, s_val, s_nnz, s_ids, s_valid, s_lshk):
+                br = SparseBatch(indices=bi, values=bv, nnz=bn, dim=dim)
+                vm = jnp.logical_and(
+                    s_valid[0], lsh_mod.band_hits(rk, rr, s_lshk[0]))
+                state = init_topk(rb, k)
+                state = bf_scan_join(
+                    state, br, s_idx[0], s_val[0], s_nnz[0], s_ids[0], vm,
+                    dim=dim,
+                )
+                return (
+                    tree_reduce_topk(state, axes, nsh),
+                    jax.lax.all_gather(jnp.sum(vm), axes),
+                )
+
+            fn = compat.shard_map(
+                local, mesh,
+                in_specs=(rep,) * 5 + (shard,) * 6,
+                out_specs=(state_spec, rep),
+            )
+        elif alg == "iib" and not approx:
             def local(r_tiles, tiles, s_rows, s_vals, s_counts, s_ids, s_valid):
                 state = init_topk(rb, k)
                 state = iib_scan_join(
@@ -676,7 +727,28 @@ class ShardedKNNStore:
                 in_specs=(rep, rep) + (shard,) * 5,
                 out_specs=state_spec,
             )
-        else:
+        elif alg == "iib":
+            def local(r_tiles, tiles, rk, rr,
+                      s_rows, s_vals, s_counts, s_ids, s_valid, s_lshk):
+                vm = jnp.logical_and(
+                    s_valid[0], lsh_mod.band_hits(rk, rr, s_lshk[0]))
+                state = init_topk(rb, k)
+                state = iib_scan_join(
+                    state, r_tiles, tiles,
+                    s_rows[0], s_vals[0], s_counts[0], s_ids[0], vm,
+                    tile=tile, num_s=sb,
+                )
+                return (
+                    tree_reduce_topk(state, axes, nsh),
+                    jax.lax.all_gather(jnp.sum(vm), axes),
+                )
+
+            fn = compat.shard_map(
+                local, mesh,
+                in_specs=(rep,) * 4 + (shard,) * 6,
+                out_specs=(state_spec, rep),
+            )
+        elif not approx:
             def local(r_tiles, mwt, tiles, rv,
                       s_rows, s_vals, s_counts, s_mass, s_ids, s_valid):
                 state = init_topk(rb, k)
@@ -698,6 +770,30 @@ class ShardedKNNStore:
                 local, mesh,
                 in_specs=(rep, rep, rep, rep) + (shard,) * 6,
                 out_specs=(state_spec, rep, rep),
+            )
+        else:
+            def local(r_tiles, mwt, tiles, rv, rk, rr,
+                      s_rows, s_vals, s_counts, s_mass, s_ids, s_valid, s_lshk):
+                vm = jnp.logical_and(
+                    s_valid[0], lsh_mod.band_hits(rk, rr, s_lshk[0]))
+                state = init_topk(rb, k)
+                state, thr, _, kept = iiib_scan_join(
+                    state, jnp.float32(-jnp.inf), r_tiles, mwt, tiles,
+                    s_rows[0], s_vals[0], s_counts[0], s_mass[0], s_ids[0],
+                    vm, rv, tile=tile, num_s=sb,
+                )
+                red = tree_reduce_topk(state, axes, nsh)
+                return (
+                    red,
+                    jax.lax.all_gather(jnp.sum(kept), axes),
+                    jax.lax.all_gather(thr, axes),
+                    jax.lax.all_gather(jnp.sum(vm), axes),
+                )
+
+            fn = compat.shard_map(
+                local, mesh,
+                in_specs=(rep,) * 6 + (shard,) * 7,
+                out_specs=(state_spec, rep, rep, rep),
             )
         self._query_fns[key] = jax.jit(fn)
         return self._query_fns[key]
@@ -786,6 +882,7 @@ class ShardedKNNStore:
         R: SparseBatch,
         stats: Optional[JoinStats] = None,
         allow_partial: bool = False,
+        accuracy: Optional[str] = None,
     ) -> JoinResult:
         """R ⋈_KNN S over all shards.  Returns stable global S ids.
 
@@ -805,11 +902,25 @@ class ShardedKNNStore:
         result carries ``missing_shards``.  Without it, a loss no replica
         covers raises :class:`ShardLostError` (callers recover() first,
         then retry — the queued-behind-recovery policy).
+
+        ``accuracy`` overrides the spec per query (the serving scheduler's
+        per-request knob): ``"approx"`` routes through the band-lookup
+        fan-out variant — same dispatch count, candidate mask folded into
+        each shard's valid mask on device; ``"exact"`` on an approx-built
+        store uses the byte-identical exact program.
         """
         t_q = time.perf_counter()
         stats = stats if stats is not None else JoinStats()
         if R.dim != self.dim:
             raise ValueError(f"dim mismatch: store has {self.dim}, got {R.dim}")
+        acc = accuracy if accuracy is not None else self.spec.accuracy
+        if acc not in ("exact", "approx"):
+            raise ValueError(f"unknown accuracy {acc!r}")
+        approx = acc == "approx"
+        if approx and self._lsh is None:
+            raise ValueError(
+                "store was built without the LSH band tier; build with "
+                "target_recall (or accuracy='approx') to enable approx queries")
         glost = self.lost_shards
         if glost and not allow_partial:
             raise ShardLostError(
@@ -830,6 +941,19 @@ class ShardedKNNStore:
                     br, "iiib", self.tile,
                     rank_np=self._rank_np, rank_dev=self._rank_dev,
                 )
+            cand_cnt = None
+            if approx:
+                # R band keys are host-hashed from the raw R slice (same
+                # projection every shard/replica uses — identical keys to
+                # the single-device engine) and replicated into the program
+                stop = min(r0 + rb, n_r)
+                rk_np = np.zeros((rb, self._lsh.cfg.n_bands), np.int32)
+                rk_np[: stop - r0] = self._lsh.keys_host(
+                    np.asarray(R.indices[r0:stop]), np.asarray(R.values[r0:stop])
+                )
+                rr_np = r_valid.copy()
+                rr_np[: stop - r0] &= np.asarray(R.nnz[r0:stop]) > 0
+                rk, rr = jnp.asarray(rk_np), jnp.asarray(rr_np)
             # failover loop: every failure tombstones a shard copy or kills
             # a replica, so attempts are bounded by the copy count.  On an
             # UNREPLICATED store `tried` stays empty and this is exactly the
@@ -861,21 +985,42 @@ class ShardedKNNStore:
                 self.stats.replica_dispatches[r] = (
                     self.stats.replica_dispatches.get(r, 0) + 1)
                 st = self._stacks[r]
-                fn = self._query_fn(rb, r)
+                fn = self._query_fn(rb, r, approx)
                 try:
                     if self.fault_plan is not None:
                         self.fault_plan.on_dispatch(replica=r)
                     if self.algorithm == "bf":
-                        state = fn(
-                            br.indices, br.values, br.nnz,
-                            st["idx"], st["val"], st["nnz"],
-                            st["ids"], st["valid"],
-                        )
+                        if approx:
+                            state, cand_cnt = fn(
+                                br.indices, br.values, br.nnz, rk, rr,
+                                st["idx"], st["val"], st["nnz"],
+                                st["ids"], st["valid"], st["lshk"],
+                            )
+                        else:
+                            state = fn(
+                                br.indices, br.values, br.nnz,
+                                st["idx"], st["val"], st["nnz"],
+                                st["ids"], st["valid"],
+                            )
                     elif self.algorithm == "iib":
-                        state = fn(
-                            prep["r_tiles"], prep["tiles"],
-                            st["rows"], st["vals"], st["counts"],
-                            st["ids"], st["valid"],
+                        if approx:
+                            state, cand_cnt = fn(
+                                prep["r_tiles"], prep["tiles"], rk, rr,
+                                st["rows"], st["vals"], st["counts"],
+                                st["ids"], st["valid"], st["lshk"],
+                            )
+                        else:
+                            state = fn(
+                                prep["r_tiles"], prep["tiles"],
+                                st["rows"], st["vals"], st["counts"],
+                                st["ids"], st["valid"],
+                            )
+                    elif approx:
+                        state, kept, thr, cand_cnt = fn(
+                            prep["r_tiles"], prep["mwt"], prep["tiles"],
+                            jnp.asarray(r_valid), rk, rr,
+                            st["rows"], st["vals"], st["counts"], st["mass"],
+                            st["ids"], st["valid"], st["lshk"],
                         )
                     else:
                         state, kept, thr = fn(
@@ -907,6 +1052,11 @@ class ShardedKNNStore:
             if self.algorithm == "iiib":
                 stats.list_entries += int(np.asarray(kept).sum())
                 stats.min_prune_trace.append(np.asarray(thr))
+            if cand_cnt is not None:
+                # the counts ride the SAME program (all_gather outputs) —
+                # no extra dispatch, pulled with the block's result
+                stats.candidate_rows += int(np.asarray(cand_cnt).sum())
+                stats.scanned_rows += int(self._stacked_host["valid"].sum())
             stats.device_dispatches += 1
             stats.blocks += self._num_blocks_stacked * self.n_shards
             if self.algorithm == "bf":
@@ -1125,6 +1275,10 @@ class ShardedKNNStore:
             "shard_rows": [int(s.n_s) for s in self.shards],
             "next_gid": int(self._next_gid),
             "auto_compact": self.auto_compact,
+            # band-index config persists like the frozen IIIB rank: the
+            # saved parameters win on restore, so keys round-trip
+            "lsh": (dataclasses.asdict(self._lsh.cfg)
+                    if self._lsh is not None else None),
         }
 
     def save(self, directory: str, extra: Optional[dict] = None,
@@ -1242,6 +1396,7 @@ class ShardedKNNStore:
             _next_gid=int(meta["next_gid"]),
             _frozen_rank=arrays.get("['rank']"),
             _shard_sizes=[int(r) for r in meta["shard_rows"]],
+            _lsh_cfg=meta.get("lsh"),
         )
         # When the loaded layout matches the saved one, the in-memory state
         # EQUALS the loaded commit: nothing is dirty, and incremental saves
@@ -1273,10 +1428,10 @@ class ShardedKNNStore:
         eff: Optional[Set[int]] = None
         for r in range(self.n_replicas):
             if self.health.state(r) == ReplicaHealth.DEAD:
-                l = set(range(self.n_shards))
+                lost = set(range(self.n_shards))
             else:
-                l = self._lost[r]
-            eff = set(l) if eff is None else (eff & l)
+                lost = self._lost[r]
+            eff = set(lost) if eff is None else (eff & lost)
         return tuple(sorted(eff))
 
     @property
@@ -1364,6 +1519,7 @@ class ShardedKNNStore:
                 _np_sparse_slice(idx, val, nnz, 0, len(nnz), self.dim),
                 shard_spec, cache_device_blocks=False,
                 frozen_rank=self._rank_np, calibration=self.calibration,
+                lsh_cfg=self._lsh.cfg if self._lsh is not None else None,
             )
             shard._alive = np.asarray(g("alive"), bool).copy()
             shard._deadline = np.asarray(g("deadline"), np.float64).copy()

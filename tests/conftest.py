@@ -5,7 +5,6 @@ Multi-device tests (ring join, sharded train, mini dry-run) spawn
 subprocesses that set ``--xla_force_host_platform_device_count`` before
 importing jax (see tests/util_subproc.py).
 """
-import numpy as np
 import pytest
 
 from repro.sparse.datagen import synthetic_sparse
@@ -20,4 +19,9 @@ def small_rs():
 
 
 def pytest_configure(config):
+    # registered in pyproject.toml too; kept here so bare pytest invocations
+    # from other rootdirs still know the markers
     config.addinivalue_line("markers", "slow: long-running integration test")
+    config.addinivalue_line(
+        "markers",
+        "subproc: spawns subprocesses (multi-device virtual-CPU suites)")

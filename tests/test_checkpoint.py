@@ -141,6 +141,7 @@ def test_orphaned_old_dir_adopted(tmp_path):
     assert not (tmp_path / "step_00000002.old-777").exists()
 
 
+@pytest.mark.subproc
 def test_sigkill_mid_save_falls_back(tmp_path):
     """A process SIGKILLed mid-write leaves a torn tmp dir; restore must
     resolve the previous committed step and the torn write must verify

@@ -3,7 +3,7 @@ import pytest
 
 from tests.util_subproc import run_with_devices
 
-pytestmark = pytest.mark.slow
+pytestmark = [pytest.mark.slow, pytest.mark.subproc]
 
 
 def test_compressed_matches_exact_sync():

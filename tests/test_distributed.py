@@ -6,7 +6,7 @@ import pytest
 
 from tests.util_subproc import run_module, run_with_devices
 
-pytestmark = pytest.mark.slow
+pytestmark = [pytest.mark.slow, pytest.mark.subproc]
 
 
 def test_ring_join_all_algorithms():

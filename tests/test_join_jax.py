@@ -5,7 +5,7 @@ import pytest
 
 from repro.core.blocknl import JoinStats, knn_join
 from repro.core.reference import oracle_knn
-from repro.sparse.datagen import spectra_like, synthetic_sparse
+from repro.sparse.datagen import spectra_like
 from repro.sparse.format import densify
 
 

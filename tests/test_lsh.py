@@ -1,0 +1,315 @@
+"""Approximate pre-filter tier (DESIGN.md §11): banding-plan math, key
+determinism, host/device candidate-mask agreement, the exact-mode
+bit-identity contract (an approx-built index's ``accuracy='exact'`` face
+must match an exact-built reference everywhere — engine cached/streaming/
+kernel, sharded store, replicated store), and the recall contract
+(``target_recall`` joins meet their bar on a fixed-seed planted-neighbor
+workload, with a strictly sublinear candidate set)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lsh
+from repro.core.engine import JoinSpec, JoinStats, SparseKNNIndex
+from repro.sparse.datagen import synthetic_sparse
+
+DIM, NNZ = 1024, 24
+
+
+def _clustered(n_clusters, per_cluster, seed=0, noise=0.05, dim=DIM, nnz=NNZ):
+    """Planted-neighbor (R, S): per_cluster noisy copies of each center in
+    S, one probe per cluster in R (same as benchmarks.common.gen_clustered
+    — duplicated small here so the tier-1 suite has no benchmarks dep)."""
+    from repro.sparse.format import SparseBatch
+
+    rng = np.random.default_rng(seed)
+    cidx = np.stack([np.sort(rng.choice(dim, size=nnz, replace=False))
+                     for _ in range(n_clusters)]).astype(np.int32)
+    cval = rng.random((n_clusters, nnz)).astype(np.float32) + 0.5
+    cval /= np.linalg.norm(cval, axis=1, keepdims=True)
+
+    def noisy(c):
+        return np.abs(cval[c] + noise * rng.standard_normal(nnz)
+                      .astype(np.float32)).astype(np.float32)
+
+    def batch(idx_rows, val_rows):
+        idx_rows, val_rows = np.stack(idx_rows), np.stack(val_rows)
+        return SparseBatch(
+            indices=jnp.asarray(idx_rows), values=jnp.asarray(val_rows),
+            nnz=jnp.asarray(np.full(len(idx_rows), nnz, np.int32)), dim=dim)
+
+    s_idx, s_val, r_idx, r_val = [], [], [], []
+    for c in range(n_clusters):
+        for _ in range(per_cluster):
+            s_idx.append(cidx[c]); s_val.append(noisy(c))
+        r_idx.append(cidx[c]); r_val.append(noisy(c))
+    return batch(r_idx, r_val), batch(s_idx, s_val)
+
+
+# ---------------------------------------------------------------------------
+# banding-plan math
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("target", [0.5, 0.9, 0.95, 0.99])
+def test_plan_meets_recall_bar_within_budget(target):
+    b, r = lsh.plan_bands(target)
+    assert b * r <= lsh.MAX_SIG_BITS and r <= lsh.MAX_ROWS_PER_BAND
+    # the planned S-curve actually clears the bar at the sim threshold
+    assert lsh.collision_probability(
+        lsh.DEFAULT_SIM_THRESHOLD, r, b) >= target
+
+
+def test_plan_is_selective():
+    """Higher recall targets cost selectivity; the background collision
+    bound b * 0.5^r stays well below 1 either way."""
+    for target in (0.9, 0.95, 0.99):
+        b, r = lsh.plan_bands(target)
+        assert b * 0.5 ** r < 0.05, (target, b, r)
+
+
+def test_plan_and_config_validation():
+    with pytest.raises(ValueError):
+        lsh.plan_bands(0.0)
+    with pytest.raises(ValueError):
+        lsh.plan_bands(1.0)
+    with pytest.raises(ValueError):
+        lsh.LSHConfig(n_bands=1, rows_per_band=31)  # int32 key overflow
+    with pytest.raises(ValueError):
+        lsh.LSHConfig(n_bands=0, rows_per_band=4)
+
+
+def test_collision_probability_is_monotone_in_sim():
+    probs = [lsh.collision_probability(s, 8, 16)
+             for s in (0.0, 0.5, 0.8, 0.9, 0.99)]
+    assert probs == sorted(probs)
+    assert probs[0] < 0.1 and probs[-1] > 0.99
+
+
+# ---------------------------------------------------------------------------
+# keys + masks
+# ---------------------------------------------------------------------------
+
+def test_keys_deterministic_across_instances():
+    """Keys are a pure function of (row data, LSHConfig, dim) — the
+    property that lets every shard and replica hash independently and
+    still agree."""
+    cfg = lsh.plan_lsh(0.95, seed=3)
+    S = synthetic_sparse(32, dim=DIM, nnz_mean=NNZ, seed=0)
+    idx, val = np.asarray(S.indices), np.asarray(S.values)
+    k1 = lsh.LSHBands(cfg, DIM).keys_host(idx, val)
+    k2 = lsh.LSHBands(cfg, DIM).keys_host(idx, val)
+    np.testing.assert_array_equal(k1, k2)
+    assert k1.shape == (32, cfg.n_bands) and k1.dtype == np.int32
+    # a different seed is a different hash family
+    k3 = lsh.LSHBands(dataclasses.replace(cfg, seed=4), DIM).keys_host(idx, val)
+    assert not np.array_equal(k1, k3)
+
+
+def test_padding_and_empty_rows():
+    """Padded features (sentinel index = dim, value 0) contribute nothing;
+    an all-empty row keys to 0 in every band."""
+    cfg = lsh.LSHConfig(n_bands=8, rows_per_band=8)
+    bands = lsh.LSHBands(cfg, DIM)
+    rng = np.random.default_rng(0)
+    idx = np.sort(rng.choice(DIM, size=NNZ, replace=False)).astype(np.int32)
+    val = rng.random(NNZ).astype(np.float32)
+    base = bands.keys_host(idx[None], val[None])
+    # repad with twice the width: keys must not move
+    idx2 = np.concatenate([idx, np.full(NNZ, DIM, np.int32)])[None]
+    val2 = np.concatenate([val, np.zeros(NNZ, np.float32)])[None]
+    np.testing.assert_array_equal(base, bands.keys_host(idx2, val2))
+    empty = bands.keys_host(np.full((1, NNZ), DIM, np.int32),
+                            np.zeros((1, NNZ), np.float32))
+    np.testing.assert_array_equal(empty, np.zeros((1, cfg.n_bands), np.int32))
+
+
+def test_device_and_host_masks_agree():
+    cfg = lsh.plan_lsh(0.95)
+    bands = lsh.LSHBands(cfg, DIM)
+    R = synthetic_sparse(24, dim=DIM, nnz_mean=NNZ, seed=0)
+    S = synthetic_sparse(2 * 40, dim=DIM, nnz_mean=NNZ, seed=1)
+    rk = bands.keys_host(np.asarray(R.indices), np.asarray(R.values))
+    sk = bands.keys_host(np.asarray(S.indices), np.asarray(S.values))
+    sk = sk.reshape(2, 40, cfg.n_bands)  # (blocks, s_block, bands)
+    r_real = np.ones(24, bool)
+    r_real[-3:] = False  # padded tail rows must not contribute
+    host = lsh.candidate_mask_host(rk, r_real, sk)
+    dev, count = lsh.candidate_mask(
+        jnp.asarray(rk), jnp.asarray(r_real), jnp.asarray(sk),
+        jnp.ones((2, 40), bool))
+    np.testing.assert_array_equal(host, np.asarray(dev))
+    assert int(count) == int(host.sum())
+    # planted collision: an S row sharing a real R row's keys is always hit
+    sk2 = sk.copy()
+    sk2[1, 7] = rk[0]
+    assert lsh.candidate_mask_host(rk, r_real, sk2)[1, 7]
+    # ...but sharing only an EXCLUDED (padded) R row's keys is not
+    sk3 = sk.copy()
+    sk3[1, 9] = rk[-1]
+    np.testing.assert_array_equal(
+        lsh.candidate_mask_host(rk, r_real, sk3)[1, 9], host[1, 9])
+
+
+def test_measured_recall():
+    exact = np.array([[0, 1, 2], [3, 4, -1], [-1, -1, -1]])
+    approx = np.array([[0, 2, 9], [3, 4, -1], [5, 6, 7]])
+    # 2/3, 2/2, empty-exact row counts as 1
+    assert lsh.measured_recall(approx, exact) == pytest.approx((2 / 3 + 1 + 1) / 3)
+    with pytest.raises(ValueError):
+        lsh.measured_recall(approx[:2], exact)
+
+
+# ---------------------------------------------------------------------------
+# exact-mode bit-identity: the accuracy contract's default face
+# ---------------------------------------------------------------------------
+
+def _spec(algorithm, n_s, **kw):
+    return JoinSpec(k=5, algorithm=algorithm, r_block=16,
+                    s_block=min(40, n_s), **kw)
+
+
+@pytest.mark.parametrize("algorithm", ["bf", "iib", "iiib"])
+@pytest.mark.parametrize("cached", [True, False])
+def test_exact_mode_bit_identity(algorithm, cached):
+    """An approx-built index queried with accuracy='exact' must be
+    bit-identical to an exact-built index — cached and streaming drivers."""
+    R = synthetic_sparse(24, dim=DIM, nnz_mean=NNZ, seed=0)
+    S = synthetic_sparse(96, dim=DIM, nnz_mean=NNZ, seed=1)
+    spec = _spec(algorithm, 96)
+    aspec = dataclasses.replace(spec, accuracy="approx", target_recall=0.9)
+    ref = SparseKNNIndex.build(S, spec, cache_device_blocks=cached).query(R)
+    idx = SparseKNNIndex.build(S, aspec, cache_device_blocks=cached)
+    got = idx.query(R, accuracy="exact")
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(ref.ids))
+    np.testing.assert_allclose(np.asarray(got.scores), np.asarray(ref.scores))
+    # and the default face of an approx index IS approx
+    assert idx.spec.accuracy == "approx"
+
+
+def test_exact_mode_bit_identity_kernel():
+    R = synthetic_sparse(24, dim=DIM, nnz_mean=NNZ, seed=0)
+    S = synthetic_sparse(96, dim=DIM, nnz_mean=NNZ, seed=1)
+    spec = _spec("iib", 96, use_kernel=True)
+    aspec = dataclasses.replace(spec, accuracy="approx", target_recall=0.9)
+    ref = SparseKNNIndex.build(S, spec).query(R)
+    got = SparseKNNIndex.build(S, aspec).query(R, accuracy="exact")
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(ref.ids))
+    np.testing.assert_allclose(np.asarray(got.scores), np.asarray(ref.scores))
+
+
+def test_exact_index_rejects_approx_queries():
+    R = synthetic_sparse(8, dim=DIM, nnz_mean=NNZ, seed=0)
+    S = synthetic_sparse(40, dim=DIM, nnz_mean=NNZ, seed=1)
+    idx = SparseKNNIndex.build(S, _spec("iib", 40))
+    with pytest.raises(ValueError):
+        idx.query(R, accuracy="approx")
+    with pytest.raises(ValueError):
+        idx.query(R, accuracy="bogus")
+
+
+# ---------------------------------------------------------------------------
+# recall contract (fixed-seed planted workload)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["bf", "iib", "iiib"])
+def test_target_recall_met_on_planted_workload(algorithm):
+    R, S = _clustered(n_clusters=16, per_cluster=8, seed=2)
+    spec = JoinSpec(k=5, algorithm=algorithm, r_block=4, s_block=32,
+                    accuracy="approx", target_recall=0.95)
+    ref = SparseKNNIndex.build(
+        S, dataclasses.replace(spec, accuracy="exact")).query(R)
+    idx = SparseKNNIndex.build(S, spec)
+    stats = JoinStats()
+    res = idx.query(R, stats=stats)
+    recall = lsh.measured_recall(np.asarray(res.ids), np.asarray(ref.ids))
+    stats.recall = recall
+    assert recall >= spec.target_recall, (algorithm, recall)
+    # the filter actually filtered: strictly sublinear candidate set
+    assert 0 < stats.candidate_rows
+    assert stats.candidate_fraction < 1.0, stats.candidate_fraction
+
+
+def test_approx_survives_extend_and_delete():
+    """Incremental add() re-stacks the band keys; tombstones AND into the
+    same masks — exact-mode parity must hold through both."""
+    R, S = _clustered(n_clusters=12, per_cluster=8, seed=5)
+    n0 = S.num_vectors - 24
+    S0 = dataclasses.replace(
+        S, indices=S.indices[:n0], values=S.values[:n0], nnz=S.nnz[:n0])
+    spec = JoinSpec(k=5, algorithm="iib", r_block=4, s_block=32,
+                    accuracy="approx", target_recall=0.95)
+    idx = SparseKNNIndex.build(S0, spec)
+    tail = dataclasses.replace(
+        S, indices=S.indices[n0:], values=S.values[n0:], nnz=S.nnz[n0:])
+    idx.extend(tail)
+    # delete 3 of cluster 0's 8 rows: every probe keeps >= k positive-score
+    # true neighbors, so the exact top-k stays free of zero-score ties
+    # (whose order would legitimately depend on block layout)
+    idx.delete(np.arange(0, 3))
+    ref = SparseKNNIndex.build(
+        S, dataclasses.replace(spec, accuracy="exact"))
+    ref.delete(np.arange(0, 3))
+    got, want = idx.query(R, accuracy="exact"), ref.query(R)
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids))
+    # deleted rows never surface as approx candidates either
+    approx = idx.query(R)
+    assert not np.isin(np.asarray(approx.ids), np.arange(3)).any()
+
+
+# ---------------------------------------------------------------------------
+# store tiers (subprocess: real multi-shard fan-out on virtual devices)
+# ---------------------------------------------------------------------------
+
+_STORE_PARITY = r"""
+import dataclasses
+import numpy as np
+from repro.core import lsh
+from repro.core.engine import JoinSpec, JoinStats, SparseKNNIndex
+from repro.store import ShardedKNNStore
+from tests.test_lsh import _clustered
+
+R, S = _clustered(n_clusters=16, per_cluster=8, seed=2)
+spec = JoinSpec(k=5, algorithm="iib", r_block=4, s_block=32,
+                accuracy="approx", target_recall=0.95)
+store = ShardedKNNStore.build(S, spec, num_shards=4, **STORE_KW)
+builds0 = store.stats.index_builds
+espec = dataclasses.replace(spec, accuracy="exact")
+ref = ShardedKNNStore.build(S, espec, num_shards=4, **STORE_KW).query(R)
+eng = SparseKNNIndex.build(S, espec).query(R)
+
+ex = store.query(R, accuracy="exact")
+assert np.array_equal(np.asarray(ex.ids), np.asarray(ref.ids))
+assert np.array_equal(np.asarray(ex.ids), np.asarray(eng.ids))
+
+stats = JoinStats()
+res = store.query(R, stats=stats)
+recall = lsh.measured_recall(np.asarray(res.ids), np.asarray(ref.ids))
+assert recall >= spec.target_recall, recall
+assert 0 < stats.candidate_rows
+assert stats.candidate_fraction < 1.0, stats.candidate_fraction
+assert store.stats.index_builds == builds0, "query-time index build"
+print("recall", recall)
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_sharded_store_recall_contract():
+    from tests.util_subproc import run_with_devices
+
+    out = run_with_devices("STORE_KW = {}\n" + _STORE_PARITY, n_devices=4)
+    assert "recall" in out
+
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_replicated_store_recall_contract():
+    from tests.util_subproc import run_with_devices
+
+    out = run_with_devices(
+        "STORE_KW = dict(replicas=2)\n"
+        + _STORE_PARITY.replace("num_shards=4", "num_shards=2"),
+        n_devices=4)
+    assert "recall" in out

@@ -63,8 +63,6 @@ def test_int8_quantization_roundtrip():
 
 def test_psum_int8_with_error_feedback():
     """Compressed all-reduce ≈ exact mean; error feedback bounds drift."""
-    from functools import partial
-
     from repro.optim.compress import psum_int8
 
     devs = jax.devices()

@@ -382,6 +382,7 @@ def test_submit_validation():
 # end-to-end showcase: kNN-LM serving over a real fan-out
 # ---------------------------------------------------------------------------
 
+@pytest.mark.subproc
 def test_knnlm_serve_example_under_fanout():
     """The example's full loop — scheduler-coalesced decode + background
     traffic, per-token add() + TTL expire() through mutate() — runs under

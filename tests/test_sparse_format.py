@@ -1,7 +1,6 @@
 """SparseBatch format + dim/tile statistics."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.sparse.format import (

@@ -8,7 +8,7 @@ import pytest
 
 from tests.util_subproc import run_with_devices
 
-pytestmark = pytest.mark.slow
+pytestmark = [pytest.mark.slow, pytest.mark.subproc]
 
 
 def test_store_bitwise_parity_and_dispatch_shape():

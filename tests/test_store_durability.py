@@ -6,7 +6,11 @@ serving scheduler (degraded-immediate and queued-behind-recovery).
 Each suite runs in a subprocess with forced virtual CPU devices so the
 store is a REAL multi-shard fan-out, not a 1-shard degenerate case.
 """
+import pytest
+
 from tests.util_subproc import run_with_devices
+
+pytestmark = [pytest.mark.slow, pytest.mark.subproc]
 
 # Shared preamble: deterministic multi-shard store + mutation history.
 _PRELUDE = r"""

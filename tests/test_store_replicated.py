@@ -10,7 +10,7 @@ import pytest
 
 from tests.util_subproc import run_with_devices
 
-pytestmark = pytest.mark.slow
+pytestmark = [pytest.mark.slow, pytest.mark.subproc]
 
 _PRELUDE = r"""
 import numpy as np
