@@ -55,8 +55,12 @@ crash-smoke:
 # a replica kill on a 2x2 replicated store (full service through the loss:
 # zero degraded, failover + background resync, bit-parity), and the
 # approx_* streams record the LSH pre-filter tier (measured recall vs the
-# exact reference, candidate fraction, exact-mode bit-parity)
-BENCH_OUT ?= BENCH_PR9.json
+# exact reference, candidate fraction, exact-mode bit-parity).  Since PR 10
+# the serving stream carries the per-phase latency breakdown + tracing
+# overhead fields, and the fault runs dump their flight-recorder span/event
+# ring to FLIGHT_OUT (JSONL) — CI uploads it next to the bench record.
+BENCH_OUT ?= BENCH_PR10.json
+FLIGHT_OUT ?= flight_recorder_PR10.jsonl
 
 bench:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
@@ -64,9 +68,11 @@ bench:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 	$(PYTHON) -m benchmarks.serve_load --fast --merge $(BENCH_OUT)
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
-	$(PYTHON) -m benchmarks.serve_load --fault-plan --merge $(BENCH_OUT)
+	$(PYTHON) -m benchmarks.serve_load --fault-plan --merge $(BENCH_OUT) \
+		--flight-dump $(FLIGHT_OUT)
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
-	$(PYTHON) -m benchmarks.serve_load --replica-fault --merge $(BENCH_OUT)
+	$(PYTHON) -m benchmarks.serve_load --replica-fault --merge $(BENCH_OUT) \
+		--flight-dump $(FLIGHT_OUT:.jsonl=_replica.jsonl)
 
 # fail if any algorithm regressed its dispatch/sync/index-build shape vs the
 # previous BENCH_PR*.json record (wall times are informational only); the

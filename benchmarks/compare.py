@@ -15,11 +15,15 @@ dispatch/sync/build counters are machine-independent.  The ``serving``
 stream (the open-loop load bench) gates separately — absolute bars
 (batched ≥ 3x serial queries/sec, zero query-time builds, bit-parity)
 plus wide relative bands on p99 / queries-per-sec / dispatches-per-
-request once two records carry it.  The ``serving_faulted`` stream
-(``serve_load --fault-plan``) gates on absolute fault-tolerance bars:
-zero lost futures under an injected shard loss, recovery completed,
-post-recovery bit-parity.  Exit code 1 on any regression —
-``make bench-compare`` wires this into CI.
+request once two records carry it — plus, since PR 10, the per-phase
+latency breakdown must be present, the record must have been measured
+with tracing ON, and its queries-per-sec must stay within 5% of the
+previous record (the tracing-overhead bar).  The ``serving_faulted``
+stream (``serve_load --fault-plan``) gates on absolute fault-tolerance
+bars: zero lost futures under an injected shard loss, recovery
+completed, post-recovery bit-parity, and a flight recorder that saw the
+injected fault and auto-dumped its ring.  Exit code 1 on any
+regression — ``make bench-compare`` wires this into CI.
 """
 from __future__ import annotations
 
@@ -66,11 +70,21 @@ def compare_serving(ns: dict, os_: dict, rows: list, failures: list) -> None:
     band of the previous record (wide: CI wall clocks vary, collapses
     don't).
     """
+    phases = ns.get("phases", {})
     absolute = {
         "speedup_vs_serial>=3": ns.get("speedup_vs_serial", 0) >= 3.0,
         "query_index_builds==0": ns.get("query_index_builds") == 0,
         "parity_ok": bool(ns.get("parity_ok")),
         "all_completed": ns.get("completed") == ns.get("requests"),
+        # PR10 observability: the record must carry the per-phase latency
+        # breakdown (p50+p99 for every scheduler phase) and must have been
+        # measured WITH tracing on — the tracing-overhead gates below are
+        # meaningless otherwise
+        "phases_present": all(
+            phases.get(p, {}).get(q) is not None
+            for p in ("queue_wait", "pad", "dispatch", "post")
+            for q in ("p50_ms", "p99_ms")),
+        "tracing_enabled": bool(ns.get("tracing", {}).get("enabled")),
     }
     for label, ok in absolute.items():
         rows.append(f"  {'serving':12s} {label:28s} {'ok' if ok else 'REGRESSED'}")
@@ -88,6 +102,13 @@ def compare_serving(ns: dict, os_: dict, rows: list, failures: list) -> None:
         "p99_ms (3x band)": (ns.get("p99_ms", 0.0), os_.get("p99_ms", 0.0) * 3.0),
         "-queries_per_s (3x band)": (
             -ns.get("queries_per_s", 0.0), -os_.get("queries_per_s", 0.0) / 3.0,
+        ),
+        # tracing overhead: the NEW record serves WITH spans + flight
+        # recorder on every request; its throughput must stay within 5%
+        # of the previous record's
+        "-tracing_qps_within_5pct": (
+            -ns.get("queries_per_s", 0.0),
+            -os_.get("queries_per_s", 0.0) * 0.95,
         ),
     }
     for metric, (new_v, bound) in relative.items():
@@ -108,6 +129,7 @@ def compare_serving_faulted(ns: dict, rows: list, failures: list) -> None:
     rebuild from its checkpoint slice, and post-recovery results must be
     bit-identical to direct queries with zero query-time index builds.
     """
+    fr = ns.get("flight_recorder", {})
     absolute = {
         "zero_lost_futures": (ns.get("completed") == ns.get("requests")
                               and ns.get("failed") == 0),
@@ -117,6 +139,11 @@ def compare_serving_faulted(ns: dict, rows: list, failures: list) -> None:
                       and bool(ns.get("recovered_all"))),
         "parity_after_recovery": bool(ns.get("parity_after_recovery")),
         "query_index_builds==0": ns.get("query_index_builds") == 0,
+        # PR10 observability: the flight recorder must have seen the
+        # injected fault and auto-dumped its ring the moment it fired
+        "flight_recorder_present": (fr.get("faults", 0) >= 1
+                                    and fr.get("auto_dumps", 0) >= 1
+                                    and "fault_injected" in fr.get("by_kind", {})),
     }
     for label, ok in absolute.items():
         rows.append(f"  {'serving_faulted':12s} {label:28s} "

@@ -55,6 +55,7 @@ import time
 import numpy as np
 
 from repro.core import JoinSpec
+from repro.obs import FlightRecorder, fanout_report, set_recorder
 from repro.serve import KNNScheduler, QueueFull, ServeConfig
 from repro.sparse.datagen import synthetic_sparse
 from repro.sparse.format import SparseBatch
@@ -79,9 +80,19 @@ def make_workload(n_requests: int, rate: float, max_rows: int, k: int,
     return pool, bounds, arrivals, ks
 
 
-async def open_loop(store, pool, bounds, arrivals, ks, config: ServeConfig):
+async def open_loop(store, pool, bounds, arrivals, ks, config: ServeConfig,
+                    warm_rounds: int = 1, arm=None):
     """Fire the workload at its recorded arrival times; resubmit on
-    admission bounces (after the advertised retry_after)."""
+    admission bounces (after the advertised retry_after).
+
+    ONE scheduler serves warmup and the timed run: ``warm_rounds`` full
+    blocks of 1-row requests compile the batch-shaped program, then
+    ``metrics.reset_window()`` restarts the measurement window (rolling
+    latency/phase samples, window clock, gauge peaks — lifetime counters
+    keep running) so the record measures serving, not XLA compilation.
+    ``arm`` (optional zero-arg callable) runs after warmup — the fault
+    benches install their FaultPlan there, so the plan's dispatch counter
+    starts at the timed traffic."""
     n = len(arrivals)
     lat = np.zeros(n)
     done_at = np.zeros(n)
@@ -102,6 +113,15 @@ async def open_loop(store, pool, bounds, arrivals, ks, config: ServeConfig):
         done_at[i] = time.monotonic()
 
     async with KNNScheduler(store, config) as sched:
+        rb = sched.r_block
+        for _ in range(max(0, warm_rounds)):
+            await asyncio.gather(*[
+                sched.submit(slice_rows(pool, i, i + 1)) for i in range(rb)
+            ])
+        sched.metrics.reset_window()
+        base = {c: getattr(sched.metrics, c) for c in _WINDOW_COUNTERS}
+        if arm is not None:
+            arm()
         t_start = time.monotonic()
         tasks = []
         for i in range(n):
@@ -112,7 +132,14 @@ async def open_loop(store, pool, bounds, arrivals, ks, config: ServeConfig):
         await asyncio.gather(*tasks)
         wall = time.monotonic() - t_start
         metrics = sched.metrics
-    return lat, done_at - t_start, wall, bounces, metrics
+    return lat, done_at - t_start, wall, bounces, metrics, base
+
+
+# lifetime counters the bench records as window deltas (warm traffic runs
+# through the SAME scheduler now, so record values subtract the post-warm
+# baseline captured by open_loop)
+_WINDOW_COUNTERS = ("completed", "failed", "batches", "batch_rows",
+                    "device_dispatches")
 
 
 def serial_baseline(store, pool, bounds, ks, sample: int):
@@ -187,46 +214,53 @@ def run(n_requests: int, rate: float, n_store: int, dim: int, nnz: int,
     config = ServeConfig(r_block=r_block, window_s=window_s,
                          queue_rows_hwm=4 * max(n_requests * 4, r_block))
 
-    # warm the one batch-shaped program (serial_baseline warmed its own
-    # per-size variants): a throwaway scheduler round with a full block,
-    # so the timed run measures serving, not XLA compilation
-    async def warm():
-        async with KNNScheduler(store, config) as sched:
-            await asyncio.gather(*[
-                sched.submit(slice_rows(pool, i, i + 1)) for i in range(r_block)
-            ])
+    # tracing is ON for the record (the scheduler's default) — the qps it
+    # reports is WITH span + recorder overhead; compare.py gates it within
+    # 5% of the pre-tracing baseline stream
+    recorder = FlightRecorder()
+    set_recorder(recorder)
 
-    asyncio.run(warm())
-
-    lat, done_at, wall, bounces, metrics = asyncio.run(
+    # compile warmup runs through the SAME scheduler (open_loop warm
+    # rounds + metrics.reset_window), so the timed run measures serving,
+    # not XLA compilation, and the record deltas out the warm traffic
+    lat, done_at, wall, bounces, metrics, base = asyncio.run(
         open_loop(store, pool, bounds, arrivals, ks, config))
     summary = metrics.summary()
+    dispatches = summary["dispatch"]["device_dispatches"] - base["device_dispatches"]
 
     qps = n_requests / wall
     record = {
         "algorithm": algorithm,
         "requests": n_requests,
-        "completed": summary["requests"]["completed"],
+        "completed": summary["requests"]["completed"] - base["completed"],
         "rejected_bounces": bounces,
-        "failed": summary["requests"]["failed"],
+        "failed": summary["requests"]["failed"] - base["failed"],
         "max_inflight": summary["requests"]["inflight_peak"],
         "arrival_rate_per_s": rate,
         "wall_s": round(wall, 4),
         "queries_per_s": round(qps, 2),
         "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
         "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
-        "batches": summary["batches"]["count"],
+        "batches": summary["batches"]["count"] - base["batches"],
         "mean_occupancy": summary["batches"]["mean_occupancy"],
-        "device_dispatches": summary["dispatch"]["device_dispatches"],
-        "dispatches_per_request": round(
-            summary["dispatch"]["device_dispatches"] / max(n_requests, 1), 4),
+        "device_dispatches": dispatches,
+        "dispatches_per_request": round(dispatches / max(n_requests, 1), 4),
         "query_index_builds": summary["dispatch"]["query_index_builds"],
+        "phases": metrics.phase_summary(),
+        "tracing": {"enabled": True, "flight_recorder": recorder.summary()},
         "serial": serial,
         "speedup_vs_serial": round(qps / serial["queries_per_s"], 2),
         "trajectory": trajectory(done_at, lat),
         "shards": store.n_shards,
         "device_count": jax.device_count(),
     }
+
+    # predicted-vs-measured FLOPs/bytes of the one fan-out program the
+    # whole run dispatched (hlo_analysis over the lowered module)
+    try:
+        record["hlo"] = fanout_report(store, slice_rows(pool, 0, r_block))
+    except Exception as e:   # cost-analysis coverage varies by backend
+        record["hlo"] = {"error": str(e)}
 
     # bit-parity of de-interleaved results vs direct per-request queries:
     # re-serve a sample through a fresh scheduler and compare
@@ -253,17 +287,26 @@ def run(n_requests: int, rate: float, n_store: int, dim: int, nnz: int,
 
 def run_faulted(n_requests: int, rate: float, n_store: int, dim: int,
                 nnz: int, k: int, r_block: int, s_block: int, window_s: float,
-                seed: int, fault_at: int, algorithm: str = "iib"):
+                seed: int, fault_at: int, algorithm: str = "iib",
+                flight_dump: str = None):
     """Open loop with an injected shard loss at dispatch ``fault_at``.
 
     The acceptance bar is ZERO LOST FUTURES: every submitted request
     resolves — degraded while the shard is down, full once the
     background recovery (rebuild from the checkpoint slice) lands — and
     a post-recovery sample is bit-identical to direct queries.
+
+    The run shares one flight recorder across serve → store → fault
+    plan: the injected fault auto-dumps the span/event ring to
+    ``flight_dump`` (JSONL) the moment it fires, and the record carries
+    the recorder summary (CI uploads the JSONL next to the bench JSON).
     """
     import jax
 
     from repro.runtime.fault import FaultPlan, FaultSpec
+
+    recorder = FlightRecorder(auto_dump_path=flight_dump)
+    set_recorder(recorder)
 
     S = synthetic_sparse(n_store, dim=dim, nnz_mean=nnz, seed=seed)
     spec = JoinSpec(k=k, algorithm=algorithm, r_block=r_block, s_block=s_block)
@@ -280,20 +323,15 @@ def run_faulted(n_requests: int, rate: float, n_store: int, dim: int,
             recover=lambda: store.recover(ckpt_dir),
         )
 
-        # warm the compiled batch shape BEFORE arming the fault, so the
-        # plan's dispatch counter starts at the timed traffic
-        async def warm():
-            async with KNNScheduler(store, config) as sched:
-                await asyncio.gather(*[
-                    sched.submit(slice_rows(pool, i, i + 1))
-                    for i in range(r_block)
-                ])
+        # the fault arms AFTER open_loop's warm rounds (the ``arm`` hook
+        # fires post-reset_window), so the plan's dispatch counter starts
+        # at the timed traffic
+        def arm():
+            store.fault_plan = FaultPlan(
+                [FaultSpec("shard_error", shard=0, at_dispatch=fault_at)])
 
-        asyncio.run(warm())
-        store.fault_plan = FaultPlan(
-            [FaultSpec("shard_error", shard=0, at_dispatch=fault_at)])
-        lat, done_at, wall, bounces, metrics = asyncio.run(
-            open_loop(store, pool, bounds, arrivals, ks, config))
+        lat, done_at, wall, bounces, metrics, base = asyncio.run(
+            open_loop(store, pool, bounds, arrivals, ks, config, arm=arm))
         store.fault_plan = None
         summary = metrics.summary()
         faults = summary["faults"]
@@ -320,11 +358,16 @@ def run_faulted(n_requests: int, rate: float, n_store: int, dim: int,
         parity = parity_sample(
             store, pool, bounds, ks, lambda i: sampled[i], sample_n)
 
+        if flight_dump:
+            # the fault's auto-dump snapshotted the ring mid-incident;
+            # re-dump now so the artifact also covers recovery + re-parity
+            recorder.dump(flight_dump)
+
         record = {
             "algorithm": algorithm,
             "requests": n_requests,
-            "completed": summary["requests"]["completed"],
-            "failed": summary["requests"]["failed"],
+            "completed": summary["requests"]["completed"] - base["completed"],
+            "failed": summary["requests"]["failed"] - base["failed"],
             "rejected_bounces": bounces,
             "degraded": faults["degraded"],
             "shard_losses": faults["shard_losses"],
@@ -338,6 +381,9 @@ def run_faulted(n_requests: int, rate: float, n_store: int, dim: int,
             "wall_s": round(wall, 4),
             "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
             "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+            "phases": metrics.phase_summary(),
+            "flight_recorder": recorder.summary(),
+            "flight_dump": flight_dump,
             "shards": store.n_shards,
             "device_count": jax.device_count(),
         }
@@ -349,7 +395,7 @@ def run_faulted(n_requests: int, rate: float, n_store: int, dim: int,
 def run_replica_faulted(n_requests: int, rate: float, n_store: int, dim: int,
                         nnz: int, k: int, r_block: int, s_block: int,
                         window_s: float, seed: int, fault_at: int,
-                        algorithm: str = "iib"):
+                        algorithm: str = "iib", flight_dump: str = None):
     """Open loop over a ``replicas=2`` store with a replica kill at
     dispatch ``fault_at``.
 
@@ -373,6 +419,10 @@ def run_replica_faulted(n_requests: int, rate: float, n_store: int, dim: int,
         raise SystemExit(
             "replica fault bench needs >= 4 devices (2 replicas x 2 shards); "
             "set XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+    recorder = FlightRecorder(auto_dump_path=flight_dump)
+    set_recorder(recorder)
+
     S = synthetic_sparse(n_store, dim=dim, nnz_mean=nnz, seed=seed)
     spec = JoinSpec(k=k, algorithm=algorithm, r_block=r_block, s_block=s_block)
     store = ShardedKNNStore(S, spec, mesh=make_store_mesh(2, replicas=2))
@@ -386,22 +436,16 @@ def run_replica_faulted(n_requests: int, rate: float, n_store: int, dim: int,
         resync=lambda: store.resync_replicas(),
     )
 
-    # warm the compiled batch shape on BOTH replicas before arming the
-    # fault (replica kinds arm at at_dispatch and fire on the first
-    # dispatch routed to the target replica)
-    async def warm():
-        async with KNNScheduler(store, config) as sched:
-            for _ in range(2):
-                await asyncio.gather(*[
-                    sched.submit(slice_rows(pool, i, i + 1))
-                    for i in range(r_block)
-                ])
+    # two warm rounds compile the batch shape on BOTH replicas; the fault
+    # arms only after them (replica kinds arm at at_dispatch and fire on
+    # the first dispatch routed to the target replica)
+    def arm():
+        store.fault_plan = FaultPlan(
+            [FaultSpec("replica_error", replica=1, at_dispatch=fault_at)])
 
-    asyncio.run(warm())
-    store.fault_plan = FaultPlan(
-        [FaultSpec("replica_error", replica=1, at_dispatch=fault_at)])
-    lat, done_at, wall, bounces, metrics = asyncio.run(
-        open_loop(store, pool, bounds, arrivals, ks, config))
+    lat, done_at, wall, bounces, metrics, base = asyncio.run(
+        open_loop(store, pool, bounds, arrivals, ks, config,
+                  warm_rounds=2, arm=arm))
     store.fault_plan = None
     summary = metrics.summary()
     faults = summary["faults"]
@@ -431,11 +475,15 @@ def run_replica_faulted(n_requests: int, rate: float, n_store: int, dim: int,
             single_parity = False
             break
 
+    if flight_dump:
+        # cover the resync + parity probes too, not just the kill moment
+        recorder.dump(flight_dump)
+
     record = {
         "algorithm": algorithm,
         "requests": n_requests,
-        "completed": summary["requests"]["completed"],
-        "failed": summary["requests"]["failed"],
+        "completed": summary["requests"]["completed"] - base["completed"],
+        "failed": summary["requests"]["failed"] - base["failed"],
         "rejected_bounces": bounces,
         "degraded": faults["degraded"],
         "replica_failovers": faults["replica_failovers"],
@@ -452,6 +500,9 @@ def run_replica_faulted(n_requests: int, rate: float, n_store: int, dim: int,
         "wall_s": round(wall, 4),
         "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
         "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+        "phases": metrics.phase_summary(),
+        "flight_recorder": recorder.summary(),
+        "flight_dump": flight_dump,
         "replicas": store.n_replicas,
         "shards": store.n_shards,
         "device_count": jax.device_count(),
@@ -530,6 +581,10 @@ def main(argv=None):
                          "bit-match (needs >= 4 devices)")
     ap.add_argument("--fault-at", type=int, default=2,
                     help="store dispatch index the shard loss fires at")
+    ap.add_argument("--flight-dump", default=None, metavar="PATH",
+                    help="fault runs: dump the flight recorder (spans + "
+                         "fault events) to this JSONL path — auto-dumped "
+                         "the moment the fault fires, re-dumped at exit")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--rate", type=float, default=None,
                     help="Poisson arrival rate (requests/s)")
@@ -547,7 +602,8 @@ def main(argv=None):
         record = run_replica_faulted(
             n_requests=args.requests or 256, rate=(args.requests or 256) / 0.2,
             n_store=512, dim=2048, nnz=32, k=5, r_block=64, s_block=128,
-            window_s=0.002, seed=args.seed, fault_at=args.fault_at)
+            window_s=0.002, seed=args.seed, fault_at=args.fault_at,
+            flight_dump=args.flight_dump)
         checks = replica_faulted_checks(record)
         print(json.dumps({"replica_faulted": record, **checks}, indent=1))
         if args.merge:
@@ -569,7 +625,8 @@ def main(argv=None):
         record = run_faulted(
             n_requests=args.requests or 256, rate=(args.requests or 256) / 0.2,
             n_store=512, dim=2048, nnz=32, k=5, r_block=64, s_block=128,
-            window_s=0.002, seed=args.seed, fault_at=args.fault_at)
+            window_s=0.002, seed=args.seed, fault_at=args.fault_at,
+            flight_dump=args.flight_dump)
         checks = faulted_checks(record)
         print(json.dumps({"serving_faulted": record, **checks}, indent=1))
         if args.merge:

@@ -45,6 +45,7 @@ from repro.configs.base import get_config
 from repro.core import JoinSpec
 from repro.launch.serve import Request, Server
 from repro.models import model as M
+from repro.obs import FlightRecorder, ProfileCapture
 from repro.serve import KNNScheduler, ServeConfig
 from repro.sparse.format import SparseBatch
 from repro.store import ShardedKNNStore
@@ -62,7 +63,8 @@ def sparsify(h: np.ndarray, keep: int = 32) -> SparseBatch:
     )
 
 
-async def main_async(ckpt: str = None, resume: bool = False):
+async def main_async(ckpt: str = None, resume: bool = False,
+                     flight_dump: str = None, profile_dir: str = None):
     cfg = get_config("qwen3-0.6b").reduced()
     srv = Server(cfg, batch=1, max_seq=64, seed=0)
     rng = np.random.default_rng(0)
@@ -110,7 +112,13 @@ async def main_async(ckpt: str = None, resume: bool = False):
     step = 0
     generated = [req.out[-1]]
 
-    sched = KNNScheduler(store, ServeConfig(r_block=8, window_s=0.005))
+    # observability: a private flight recorder holds the serve→store span
+    # timeline (dumped as JSONL with --flight-dump); --profile arms a
+    # jax.profiler capture around the first 3 coalesced batches
+    recorder = FlightRecorder(auto_dump_path=flight_dump)
+    profile = ProfileCapture(profile_dir) if profile_dir else None
+    sched = KNNScheduler(store, ServeConfig(r_block=8, window_s=0.005),
+                         recorder=recorder, profile=profile)
     async with sched:
         while srv.occupancy():
             s = 0  # single slot
@@ -196,6 +204,17 @@ async def main_async(ckpt: str = None, resume: bool = False):
     print(f"serving:   {m.completed} requests in {m.batches} coalesced "
           f"batches (occupancy {occ}), p50 {lat['p50_ms']}ms "
           f"p99 {lat['p99_ms']}ms")
+    ph = m.phase_summary()
+    print("phases:    " + "  ".join(
+        f"{name} p50 {ph[name]['p50_ms']}ms"
+        for name in ("queue_wait", "pad", "dispatch", "post")))
+    rs = recorder.summary()
+    print(f"recorder:  {rs['events']} events ({rs['faults']} faults) — "
+          f"{rs['by_kind']}")
+    if flight_dump:
+        print(f"flight recorder dumped to {recorder.dump(flight_dump)}")
+    if profile is not None:
+        print(f"profiler:  {profile.summary()}")
 
 
 def main(argv=None):
@@ -206,10 +225,18 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true",
                     help="warm-restart the datastore from --ckpt instead "
                          "of building it")
+    ap.add_argument("--flight-dump", default=None,
+                    help="dump the serving flight recorder (spans + fault "
+                         "events) to this JSONL path at exit")
+    ap.add_argument("--profile", default=None,
+                    help="capture a jax.profiler trace of the first 3 "
+                         "batches into this logdir")
     args = ap.parse_args(argv)
     if args.resume and not args.ckpt:
         ap.error("--resume requires --ckpt")
-    asyncio.run(main_async(ckpt=args.ckpt, resume=args.resume))
+    asyncio.run(main_async(ckpt=args.ckpt, resume=args.resume,
+                           flight_dump=args.flight_dump,
+                           profile_dir=args.profile))
 
 
 if __name__ == "__main__":

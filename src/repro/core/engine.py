@@ -52,9 +52,10 @@ scanned driver is tested against.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Deque, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +74,8 @@ from repro.core.index import (
     max_rows_bound,
 )
 from repro.core.topk import TopKState, init_topk, min_prune_score, topk_update
+from repro.obs import trace as obs_trace
+from repro.obs.registry import get_registry
 from repro.sparse.format import SparseBatch, num_tiles
 
 # planner constants: the pair-score accumulator of one (B_r, B_s) pair is
@@ -84,6 +87,28 @@ from repro.sparse.format import SparseBatch, num_tiles
 PAIR_BUDGET = 1 << 24
 DEFAULT_S_BLOCK = 4096
 INDEX_COST_FACTOR = 4.0
+
+# JoinStats.min_prune_trace window: most-recent R blocks kept for ad-hoc
+# inspection; the lifetime distribution is the registry histogram below
+MIN_PRUNE_TRACE_CAP = 256
+
+# similarity-score-scale buckets for the IIIB MinPruneScore histogram
+# (values below the first edge — including warm-start-less early blocks —
+# land in the lowest bucket; the +Inf bucket catches outliers)
+_THR_BUCKETS = (0.0, 0.05, 0.1, 0.2, 0.3, 0.5, 0.75, 1.0, 1.5, 2.0,
+                4.0, 8.0, 16.0)
+
+
+def observe_thresholds(thr) -> None:
+    """Feed one R block's MinPruneScore trace into the process-registry
+    ``knn_min_prune_threshold`` histogram — the bounded, lossless view of
+    threshold evolution (`Histogram.observe` drops the -inf seeds)."""
+    h = get_registry().histogram(
+        "knn_min_prune_threshold",
+        "IIIB MinPruneScore evolution (per S block, all R blocks)",
+        buckets=_THR_BUCKETS)
+    for v in np.asarray(thr, np.float64).ravel():
+        h.observe(v)
 
 
 def load_calibration(calibration) -> Optional[dict]:
@@ -125,8 +150,13 @@ class JoinStats:
     candidate_rows: int = 0        # Σ live S rows surviving the band filter
     scanned_rows: int = 0          # Σ live S rows the exact scan would visit
     # IIIB observability: per-R-block MinPruneScore traces ((s_blocks + 1,)
-    # each: [seed, after block 0, ...]) — pulled with the result, no extra sync
-    min_prune_trace: List[np.ndarray] = dataclasses.field(default_factory=list)
+    # each: [seed, after block 0, ...]) — pulled with the result, no extra
+    # sync.  Bounded: the deque keeps the MOST RECENT R blocks' traces (a
+    # long-running index would otherwise grow one array per block forever);
+    # the lifetime threshold distribution lives in the process registry's
+    # ``knn_min_prune_threshold`` histogram (see ``observe_thresholds``).
+    min_prune_trace: Deque[np.ndarray] = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=MIN_PRUNE_TRACE_CAP))
 
     @property
     def candidate_fraction(self) -> Optional[float]:
@@ -1092,6 +1122,11 @@ class SparseKNNIndex:
         out_scores = []
         out_ids = []
         for r0 in range(0, n_r, rb):
+            # leaf span per R block (start/end, not `with` — nothing nests
+            # below it on this thread); parents to whatever serving span is
+            # active, a no-op None when tracing is off
+            _sp = obs_trace.start_span("engine.r_block", r0=r0,
+                                       algorithm=algorithm)
             br, r_valid = _pad_block(R, r0, rb)
             state = init_topk(rb, k)                       # InitPruneScore
             aux = None
@@ -1191,11 +1226,14 @@ class SparseKNNIndex:
             if aux is not None:
                 # rides home with the result pull — same sync point
                 stats.list_entries += int(np.asarray(aux["kept"]).sum())
-                stats.min_prune_trace.append(np.asarray(aux["thr"]))
+                thr = np.asarray(aux["thr"])
+                stats.min_prune_trace.append(thr)
+                observe_thresholds(thr)
             if cand_count is not None:
                 stats.candidate_rows += int(np.asarray(cand_count))
                 stats.host_syncs += 1          # the candidate-count pull
             stats.host_syncs += 1                          # the R block's result pull
+            obs_trace.end_span(_sp)
 
         dt = time.perf_counter() - t_q
         stats.query_wall_s += dt

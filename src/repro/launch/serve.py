@@ -163,22 +163,24 @@ def main(argv=None):
     srv = Server(cfg, args.batch, args.max_seq)
 
     from repro.runtime.fault import with_timeout
+    from repro.serve.metrics import ServeMetrics
 
+    # fault-path counters live in a registry-backed ServeMetrics: the
+    # printed "faults" section IS metrics.faults() — one schema (and one
+    # storage) shared with the query-serving front-end, no hand mirror
+    metrics = ServeMetrics()
     t0 = time.time()
     steps = 0
-    rejected = 0        # admission bounces: a pending request found no slot
-    timeouts = 0        # step watchdog firings
-    retries = 0         # steps re-driven after a watchdog firing
     while pending or srv.occupancy():
         while pending and srv.admit(pending[0]):
             pending.popleft()
         if pending:
-            rejected += 1
+            metrics.on_reject()     # admission bounce: no free slot
         try:
             with_timeout(srv.step, args.step_timeout)
         except TimeoutError:
-            timeouts += 1
-            retries += 1
+            metrics.timeouts += 1   # step watchdog fired
+            metrics.retries += 1
             with_timeout(srv.step, args.step_timeout)  # one retry, then raise
         steps += 1
         if steps > 10_000:
@@ -194,14 +196,7 @@ def main(argv=None):
         "total_tokens": total_tokens,
         "tokens_per_request": tokens_per_request,
         "latency_ms": srv.latency_summary(),
-        # failure-path counters: same section shape as the query-serving
-        # front-end's metrics summary (repro.serve.metrics -> "faults"),
-        # so benches assert one schema across both serving stacks
-        "faults": {
-            "rejected": rejected, "timeouts": timeouts,
-            "retries": retries, "degraded": 0,
-            "replica_failovers": 0, "resyncs": 0,
-        },
+        "faults": metrics.faults(),
     }))
     return 0
 

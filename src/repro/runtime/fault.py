@@ -178,10 +178,27 @@ class FaultPlan:
     tests and benches replay identical fault sequences.
     """
 
-    def __init__(self, specs):
+    def __init__(self, specs, recorder=None):
         self.specs = list(specs)
         self.dispatches = 0
         self.fired: list = []
+        # flight recorder the injections announce themselves to (default:
+        # the process-wide one) — the dumped timeline shows the CAUSE next
+        # to the failover/recovery effects the store records
+        self.recorder = recorder
+
+    def _recorder(self):
+        if self.recorder is not None:
+            return self.recorder
+        from repro.obs.recorder import get_recorder
+
+        return get_recorder()
+
+    def _note(self, spec, n: int) -> None:
+        self._recorder().fault(
+            "fault_injected", fault_kind=spec.kind, at_dispatch=n,
+            shard=getattr(spec, "shard", None),
+            replica=getattr(spec, "replica", None))
 
     def on_dispatch(self, replica: Optional[int] = None) -> None:
         """``replica`` is the replica the store routed this dispatch to
@@ -197,6 +214,7 @@ class FaultPlan:
                 if spec.at_dispatch != n:
                     continue
                 self.fired.append(spec)
+                self._note(spec, n)
                 if spec.kind == "shard_error":
                     raise ShardLostError(spec.shard, f"injected at dispatch {n}")
                 time.sleep(spec.wedge_s)
@@ -204,6 +222,7 @@ class FaultPlan:
                 if n < spec.at_dispatch or replica != spec.replica:
                     continue
                 self.fired.append(spec)
+                self._note(spec, n)
                 if spec.kind == "replica_error":
                     raise ReplicaLostError(
                         spec.replica, f"injected at dispatch {n}")

@@ -1,26 +1,39 @@
 """Serving metrics: rolling latency percentiles, queue depth, batch
-occupancy, throughput, and the store's dispatch counters.
+occupancy, throughput, per-phase latency breakdown, and the store's
+dispatch counters — all backed by one typed metric registry.
 
 The scheduler feeds every event in here (`on_submit` / `on_reject` /
-`on_batch` / `on_complete`); nothing in this module touches the event
-loop or the device, so the same accounting runs inside tests, the
-open-loop load bench (`benchmarks/serve_load.py`), and the kNN-LM
+`on_batch` / `on_complete` / `on_phases`); nothing in this module touches
+the event loop or the device, so the same accounting runs inside tests,
+the open-loop load bench (`benchmarks/serve_load.py`), and the kNN-LM
 example.  `summary()` is the JSON schema DESIGN.md §8 documents — it is
-what `BENCH_PR6.json`'s ``serving`` stream records and what
-`benchmarks/compare.py` gates on.
+what the ``serving`` bench stream records and what
+`benchmarks/compare.py` gates on; its shape is frozen (the schema
+backward-compatibility test pins it).
+
+Since PR 10 every counter and gauge attribute resolves to a typed
+instrument in ``self.registry`` (repro.obs.registry): ``m.submitted`` and
+``m.retries += 1`` read/write the registry cells directly, so the JSON
+summary and the OpenMetrics text exposition (``m.expose()``) can never
+drift — they are two views of the same storage.  The per-phase breakdown
+(queue-wait / pad / dispatch-wall / post, from the scheduler's span
+timings) is reported by ``phase_summary()``.
 
 Latency percentiles are computed over a bounded rolling window (default
 8192 most-recent samples) so a long-running server's summary reflects
 recent behaviour, not its whole lifetime; counters are lifetime.
+``reset_window()`` restarts the window clock and rolling samples (after
+compile warmup, say) without touching the lifetime counters.
 """
 from __future__ import annotations
 
 import collections
-import dataclasses
 import time
 from typing import Dict, Optional
 
 import numpy as np
+
+from repro.obs.registry import DEFAULT_TIME_BUCKETS_S, MetricRegistry
 
 
 def percentiles(samples, points=(50.0, 99.0)) -> Dict[str, Optional[float]]:
@@ -38,15 +51,36 @@ def percentiles(samples, points=(50.0, 99.0)) -> Dict[str, Optional[float]]:
 
 
 class RollingWindow:
-    """Bounded sample window with percentile queries."""
+    """Bounded sample window with percentile queries.
 
-    def __init__(self, maxlen: int = 8192):
+    ``hist`` (optional) is a registry Histogram every sample is also
+    observed into — the window answers "recent p99", the histogram keeps
+    the lossless lifetime distribution for the exposition.  Percentile
+    callers on a hot path should ``snapshot()`` ONCE and compute from the
+    array; the per-call ``percentile()``/``mean()`` remain for
+    compatibility and one-off reads.
+    """
+
+    def __init__(self, maxlen: int = 8192, hist=None):
         self._samples: collections.deque = collections.deque(maxlen=maxlen)
         self.count = 0          # lifetime observations (window is bounded)
+        self.hist = hist
 
     def record(self, value: float) -> None:
-        self._samples.append(float(value))
+        v = float(value)
+        self._samples.append(v)
         self.count += 1
+        if self.hist is not None:
+            self.hist.observe(v)
+
+    def snapshot(self) -> np.ndarray:
+        """Materialize the window once; compute every statistic from it."""
+        return np.asarray(self._samples, dtype=np.float64)
+
+    def reset(self) -> None:
+        """Drop the window samples (lifetime ``count`` and the histogram
+        keep accumulating — they are lifetime by contract)."""
+        self._samples.clear()
 
     def percentile(self, p: float) -> Optional[float]:
         if not self._samples:
@@ -59,56 +93,127 @@ class RollingWindow:
         return float(np.mean(np.asarray(self._samples)))
 
 
-@dataclasses.dataclass
+def _pct(arr: np.ndarray, p: float) -> Optional[float]:
+    return float(np.percentile(arr, p)) if arr.size else None
+
+
+def _mean(arr: np.ndarray) -> Optional[float]:
+    return float(np.mean(arr)) if arr.size else None
+
+
+_OCCUPANCY_BUCKETS = tuple(round(0.1 * i, 1) for i in range(1, 11))
+
+
 class ServeMetrics:
-    """Scheduler-lifetime accounting (see module docstring for scope)."""
+    """Scheduler-lifetime accounting (see module docstring for scope).
 
-    r_block: int = 0                 # batch geometry (occupancy denominator)
+    Counter/gauge attributes are registry-backed: the class-level tables
+    below map each attribute to its instrument name, ``__getattr__`` /
+    ``__setattr__`` route reads and writes through the instrument, and
+    the instrument is registered in ``self.registry`` — the single
+    backing for the JSON summary AND the text exposition.
+    """
 
-    # request counters
-    submitted: int = 0
-    completed: int = 0
-    rejected: int = 0                # admission-control bounces
-    failed: int = 0                  # retries exhausted → future errored
-    deadline_misses: int = 0         # delivered after their deadline
+    # attribute → (instrument name, help)
+    _COUNTERS = {
+        "submitted": ("serve_requests_submitted", "requests admitted"),
+        "completed": ("serve_requests_completed", "requests resolved"),
+        "rejected": ("serve_requests_rejected", "admission-control bounces"),
+        "failed": ("serve_requests_failed", "retries exhausted, future errored"),
+        "deadline_misses": ("serve_deadline_misses",
+                            "delivered after their deadline"),
+        "batches": ("serve_batches", "dispatched batches"),
+        "batch_rows": ("serve_batch_rows", "live rows over all batches"),
+        "retries": ("serve_batch_retries", "batch dispatch retries"),
+        "timeouts": ("serve_batch_timeouts", "batch watchdog firings"),
+        "degraded": ("serve_degraded_requests",
+                     "requests answered with shards missing"),
+        "shard_losses": ("serve_shard_losses", "ShardLostError observations"),
+        "recoveries": ("serve_recoveries", "shard recoveries completed"),
+        "recovery_s": ("serve_recovery_seconds",
+                       "total wall time spent recovering"),
+        "replica_failovers": ("serve_replica_failovers",
+                              "dispatches served by a backup replica"),
+        "resyncs": ("serve_resyncs", "replica anti-entropy passes completed"),
+        "resync_s": ("serve_resync_seconds",
+                     "total wall time spent resyncing"),
+        "device_dispatches": ("serve_store_device_dispatches",
+                              "summed store dispatches of every batch query"),
+        "host_syncs": ("serve_store_host_syncs",
+                       "summed store host syncs of every batch query"),
+        "query_index_builds": ("serve_store_query_index_builds",
+                               "MUST stay 0: build-once is the contract"),
+    }
+    _GAUGES = {
+        "queue_depth": ("serve_queue_depth",
+                        "rows currently queued (scheduler-owned)"),
+        "queue_depth_peak": ("serve_queue_depth_peak", "peak queued rows"),
+        "inflight": ("serve_inflight",
+                     "requests admitted but not completed"),
+        "inflight_peak": ("serve_inflight_peak", "peak inflight requests"),
+        "ewma_batch_s": ("serve_batch_ewma_seconds",
+                         "dispatch wall-time EWMA (deadline pressure)"),
+    }
 
-    # batch counters
-    batches: int = 0
-    batch_rows: int = 0              # live rows over all batches
-    retries: int = 0                 # batch dispatch retries
-    timeouts: int = 0                # batch watchdog firings
+    def __init__(self, r_block: int = 0,
+                 registry: Optional[MetricRegistry] = None):
+        # _inst must exist before any delegated __setattr__ fires
+        object.__setattr__(self, "_inst", {})
+        reg = registry or MetricRegistry()
+        self.registry = reg
+        for attr, (name, hlp) in self._COUNTERS.items():
+            self._inst[attr] = reg.counter(name, hlp)
+        for attr, (name, hlp) in self._GAUGES.items():
+            self._inst[attr] = reg.gauge(name, hlp)
 
-    # failure-path counters (the fault bench's schema)
-    degraded: int = 0                # requests answered with shards missing
-    shard_losses: int = 0            # ShardLostError observations
-    recoveries: int = 0              # shard recoveries completed
-    recovery_s: float = 0.0          # total wall time spent recovering
-
-    # replica routing counters (replicated stores; all zero otherwise)
-    replica_failovers: int = 0       # dispatches served by a backup replica
-    resyncs: int = 0                 # replica anti-entropy passes completed
-    resync_s: float = 0.0            # total wall time spent resyncing
-
-    # store dispatch counters (summed JoinStats of every batch query)
-    device_dispatches: int = 0
-    host_syncs: int = 0
-    query_index_builds: int = 0      # MUST stay 0: build-once is the contract
-
-    # gauges
-    queue_depth: int = 0             # rows currently queued (scheduler-owned)
-    queue_depth_peak: int = 0
-    inflight: int = 0                # requests admitted but not completed
-    inflight_peak: int = 0
-
-    ewma_batch_s: float = 0.0        # dispatch wall-time estimate (deadline
-    ewma_alpha: float = 0.25         # pressure uses this as service_est)
-
-    def __post_init__(self):
-        self.latency = RollingWindow()        # submit → result, seconds
-        self.batch_wall = RollingWindow()     # per-batch dispatch seconds
-        self.occupancy = RollingWindow()      # live rows / r_block per batch
+        self.r_block = r_block           # batch geometry (occupancy denom)
+        self.ewma_alpha = 0.25
+        self.latency = RollingWindow(hist=reg.histogram(
+            "serve_latency_seconds", "submit -> result latency"))
+        self.batch_wall = RollingWindow(hist=reg.histogram(
+            "serve_batch_wall_seconds", "per-batch dispatch wall"))
+        self.occupancy = RollingWindow(hist=reg.histogram(
+            "serve_batch_occupancy", "live rows / r_block per batch",
+            buckets=_OCCUPANCY_BUCKETS))
+        # per-phase latency breakdown (the scheduler's span timings):
+        # queue-wait (submit -> batch assembly), pad (coalesce + pad),
+        # dispatch (executor store.query wall incl. retries), post
+        # (metrics + de-interleave + future delivery)
+        self.queue_wait = RollingWindow(hist=reg.histogram(
+            "serve_phase_queue_wait_seconds", "submit -> batch assembly"))
+        self.pad = RollingWindow(hist=reg.histogram(
+            "serve_phase_pad_seconds", "batch coalesce + pad"))
+        self.dispatch_wall = RollingWindow(hist=reg.histogram(
+            "serve_phase_dispatch_seconds", "store dispatch wall"))
+        self.post = RollingWindow(hist=reg.histogram(
+            "serve_phase_post_seconds", "de-interleave + delivery"))
         self.replica_dispatches: Dict[int, int] = {}  # replica → dispatches
         self._t0 = time.monotonic()
+        # window bases: reset_window() rebases throughput on these so
+        # queries_per_s measures the window, lifetime counters keep running
+        self._completed0 = 0
+        self._rows0 = 0
+
+    # -- registry delegation -------------------------------------------------
+
+    def __getattr__(self, name):
+        # only called when normal lookup misses — i.e. backed attributes
+        inst = object.__getattribute__(self, "__dict__").get("_inst", {}).get(name)
+        if inst is not None:
+            return inst.value
+        raise AttributeError(
+            f"{type(self).__name__!s} has no attribute {name!r}")
+
+    def __setattr__(self, name, value):
+        inst = self.__dict__.get("_inst", {}).get(name)
+        if inst is not None:
+            inst.set(value)
+        else:
+            object.__setattr__(self, name, value)
+
+    def expose(self) -> str:
+        """OpenMetrics-style text exposition of the backing registry."""
+        return self.registry.expose()
 
     # -- scheduler hooks -----------------------------------------------------
 
@@ -139,6 +244,16 @@ class ServeMetrics:
         if stats is not None:
             self.device_dispatches += stats.device_dispatches
             self.host_syncs += stats.host_syncs
+
+    def on_phases(self, queue_wait_s, pad_s: float, dispatch_s: float,
+                  post_s: float) -> None:
+        """One batch's phase timings; ``queue_wait_s`` is per-request
+        (a batch coalesces many), the rest are per-batch."""
+        for w in queue_wait_s:
+            self.queue_wait.record(w)
+        self.pad.record(pad_s)
+        self.dispatch_wall.record(dispatch_s)
+        self.post.record(post_s)
 
     def on_complete(self, latency_s: float, missed_deadline: bool = False) -> None:
         self.completed += 1
@@ -173,6 +288,23 @@ class ServeMetrics:
         self.resyncs += 1
         self.resync_s += wall_s
 
+    # -- windowing -----------------------------------------------------------
+
+    def reset_window(self) -> None:
+        """Restart the measurement window: zero the window clock, drop the
+        rolling samples, and rebase gauge peaks — keep every lifetime
+        counter (and the registry histograms) running.  The load bench
+        calls this after compile warmup so ``queries_per_s``/``elapsed_s``
+        measure the timed interval, not scheduler lifetime."""
+        self._t0 = time.monotonic()
+        self._completed0 = self.completed
+        self._rows0 = self.batch_rows
+        for w in (self.latency, self.batch_wall, self.occupancy,
+                  self.queue_wait, self.pad, self.dispatch_wall, self.post):
+            w.reset()
+        self.queue_depth_peak = self.queue_depth
+        self.inflight_peak = self.inflight
+
     # -- reporting -----------------------------------------------------------
 
     @property
@@ -181,14 +313,17 @@ class ServeMetrics:
 
     @property
     def queries_per_s(self) -> float:
-        return self.completed / max(self.elapsed_s, 1e-9)
+        return (self.completed - self._completed0) / max(self.elapsed_s, 1e-9)
 
     def summary(self) -> dict:
-        """The DESIGN.md §8 metrics schema (JSON-able)."""
+        """The DESIGN.md §8 metrics schema (JSON-able).  Frozen shape —
+        the per-phase breakdown lives in :meth:`phase_summary`, the text
+        exposition in :meth:`expose`."""
+        lat_arr = self.latency.snapshot()      # ONE materialization
         lat = {
-            "p50_ms": _ms(self.latency.percentile(50)),
-            "p99_ms": _ms(self.latency.percentile(99)),
-            "mean_ms": _ms(self.latency.mean()),
+            "p50_ms": _ms(_pct(lat_arr, 50)),
+            "p99_ms": _ms(_pct(lat_arr, 99)),
+            "mean_ms": _ms(_mean(lat_arr)),
         }
         return {
             "requests": {
@@ -203,14 +338,14 @@ class ServeMetrics:
             "throughput": {
                 "queries_per_s": round(self.queries_per_s, 2),
                 "rows_per_s": round(
-                    self.batch_rows / max(self.elapsed_s, 1e-9), 2
+                    (self.batch_rows - self._rows0) / max(self.elapsed_s, 1e-9), 2
                 ),
                 "elapsed_s": round(self.elapsed_s, 4),
             },
             "batches": {
                 "count": self.batches,
-                "mean_occupancy": _r4(self.occupancy.mean()),
-                "mean_wall_ms": _ms(self.batch_wall.mean()),
+                "mean_occupancy": _r4(_mean(self.occupancy.snapshot())),
+                "mean_wall_ms": _ms(_mean(self.batch_wall.snapshot())),
                 "retries": self.retries,
                 "timeouts": self.timeouts,
             },
@@ -218,29 +353,51 @@ class ServeMetrics:
                 "depth": self.queue_depth,
                 "depth_peak": self.queue_depth_peak,
             },
-            "faults": {
-                "timeouts": self.timeouts,
-                "retries": self.retries,
-                "rejected": self.rejected,
-                "failed": self.failed,
-                "degraded": self.degraded,
-                "shard_losses": self.shard_losses,
-                "recoveries": self.recoveries,
-                "recovery_s": round(self.recovery_s, 4),
-                "replica_failovers": self.replica_failovers,
-                "resyncs": self.resyncs,
-                "resync_s": round(self.resync_s, 4),
-                "replica_dispatches": {
-                    str(r): n
-                    for r, n in sorted(self.replica_dispatches.items())
-                },
-            },
+            "faults": self.faults(),
             "dispatch": {
                 "device_dispatches": self.device_dispatches,
                 "host_syncs": self.host_syncs,
                 "query_index_builds": self.query_index_builds,
             },
         }
+
+    def faults(self) -> dict:
+        """The ``summary()["faults"]`` section — THE fault-counter schema
+        both serving front-ends print (``launch/serve.py`` sources its
+        JSON from here too, so the shapes cannot drift)."""
+        return {
+            "timeouts": self.timeouts,
+            "retries": self.retries,
+            "rejected": self.rejected,
+            "failed": self.failed,
+            "degraded": self.degraded,
+            "shard_losses": self.shard_losses,
+            "recoveries": self.recoveries,
+            "recovery_s": round(float(self.recovery_s), 4),
+            "replica_failovers": self.replica_failovers,
+            "resyncs": self.resyncs,
+            "resync_s": round(float(self.resync_s), 4),
+            "replica_dispatches": {
+                str(r): n
+                for r, n in sorted(self.replica_dispatches.items())
+            },
+        }
+
+    def phase_summary(self) -> dict:
+        """Per-phase latency breakdown over the current window: where a
+        request's submit→result time went (queue-wait and the batch's
+        pad/dispatch/post phases)."""
+        out = {}
+        for name, w in (("queue_wait", self.queue_wait), ("pad", self.pad),
+                        ("dispatch", self.dispatch_wall), ("post", self.post)):
+            arr = w.snapshot()
+            out[name] = {
+                "p50_ms": _ms(_pct(arr, 50)),
+                "p99_ms": _ms(_pct(arr, 99)),
+                "mean_ms": _ms(_mean(arr)),
+                "count": w.count,
+            }
+        return out
 
 
 def _ms(v: Optional[float]) -> Optional[float]:
@@ -249,3 +406,7 @@ def _ms(v: Optional[float]) -> Optional[float]:
 
 def _r4(v: Optional[float]) -> Optional[float]:
     return None if v is None else round(v, 4)
+
+
+# re-exported for histogram-bucket callers (serve_load's phase record)
+TIME_BUCKETS_S = DEFAULT_TIME_BUCKETS_S

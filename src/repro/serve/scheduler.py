@@ -68,6 +68,8 @@ from typing import Any, Callable, Deque, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.recorder import FlightRecorder, get_recorder
+from repro.obs.trace import Tracer
 from repro.runtime.fault import RetryPolicy, ShardLostError, with_timeout
 from repro.serve.metrics import ServeMetrics
 from repro.sparse.format import SparseBatch
@@ -161,6 +163,7 @@ class _Pending:
     t_deadline: Optional[float]          # absolute monotonic, or None
     accuracy: Optional[str]              # per-request override, or None (store default)
     future: asyncio.Future
+    span: Any = None                     # request-root trace span (or None)
 
 
 def _bucket_up(n: int, m: int) -> int:
@@ -182,7 +185,10 @@ class KNNScheduler:
     """
 
     def __init__(self, store, config: Optional[ServeConfig] = None,
-                 metrics: Optional[ServeMetrics] = None):
+                 metrics: Optional[ServeMetrics] = None,
+                 tracer: Optional[Tracer] = None,
+                 recorder: Optional[FlightRecorder] = None,
+                 profile=None):
         self.store = store
         cfg = config or ServeConfig()
         if cfg.r_block is None:
@@ -199,6 +205,12 @@ class KNNScheduler:
         self.dim = int(store.dim)
         self.metrics = metrics or ServeMetrics(r_block=self.r_block)
         self.metrics.r_block = self.r_block
+        # one timeline across scheduler -> store -> engine: spans and fault
+        # events land in the (shared, by default) flight recorder; `profile`
+        # is an optional obs.ProfileCapture armed around the next N batches
+        self.recorder = recorder or get_recorder()
+        self.tracer = tracer or Tracer(recorder=self.recorder)
+        self.profile = profile
 
         self._pending: Deque[_Pending] = collections.deque()
         self._queued_rows = 0
@@ -238,6 +250,7 @@ class KNNScheduler:
                 if not req.future.done():
                     req.future.set_exception(
                         RuntimeError("scheduler stopped without drain"))
+                self.tracer.end(req.span, error="scheduler_stopped")
             self.metrics.on_fail(len(self._pending))
             self.metrics.queue_depth -= self._queued_rows
             self._pending.clear()
@@ -247,6 +260,8 @@ class KNNScheduler:
         while self._dispatches:
             await asyncio.gather(*tuple(self._dispatches))
         self._exec.shutdown(wait=True)
+        if self.profile is not None:
+            self.profile.stop()
 
     async def __aenter__(self) -> "KNNScheduler":
         return await self.start()
@@ -309,6 +324,8 @@ class KNNScheduler:
             t_deadline=None if deadline is None else now + float(deadline),
             accuracy=accuracy,
             future=asyncio.get_running_loop().create_future(),
+            span=self.tracer.begin("request", parent=None,
+                                   rid=self._next_rid, rows=n),
         )
         self._next_rid += 1
         self._pending.append(req)
@@ -322,8 +339,13 @@ class KNNScheduler:
         if not self._running:
             raise RuntimeError("scheduler is not running")
         loop = asyncio.get_running_loop()
-        return await loop.run_in_executor(
-            self._exec, lambda: fn(*args, **kwargs))
+        name = getattr(fn, "__name__", type(fn).__name__)
+
+        def _run():
+            with self.tracer.span("mutate", op=name):
+                return fn(*args, **kwargs)
+
+        return await loop.run_in_executor(self._exec, _run)
 
     def _retry_after(self) -> float:
         """Drain-time estimate for a rejected caller: queued batches ×
@@ -409,12 +431,16 @@ class KNNScheduler:
         return SparseBatch(indices=jnp.asarray(idx), values=jnp.asarray(val),
                            nnz=jnp.asarray(nnz), dim=self.dim)
 
-    def _query_once(self, batch: SparseBatch, accuracy: Optional[str] = None):
+    def _query_once(self, batch: SparseBatch, accuracy: Optional[str] = None,
+                    parent_span=None):
         """Executor-side: one store dispatch under the batch watchdog.
         Returns (ids, scores, JoinStats, index_builds_delta, missing_shards,
         routing) as host data; ``routing`` is this dispatch's replica-level
         delta — failovers and per-replica dispatch counts — for stores that
-        track them (empty otherwise)."""
+        track them (empty otherwise).  ``parent_span`` is the batch span the
+        event loop started: the attach+span happens INSIDE the closure so
+        the context lands on whichever thread actually runs the query
+        (``with_timeout`` moves it to a watchdog thread when armed)."""
         st = getattr(self.store, "stats", None)
         builds0 = getattr(st, "index_builds", 0)
         fail0 = getattr(st, "replica_failovers", 0)
@@ -424,8 +450,15 @@ class KNNScheduler:
             kw["allow_partial"] = True
         if accuracy is not None:
             kw["accuracy"] = accuracy
-        res = with_timeout(
-            self.store.query, self.config.batch_timeout_s, batch, **kw)
+
+        def _call():
+            with self.tracer.attach(parent_span):
+                with self.tracer.span("store.dispatch",
+                                      rows=batch.num_vectors,
+                                      accuracy=accuracy or "default"):
+                    return self.store.query(batch, **kw)
+
+        res = with_timeout(_call, self.config.batch_timeout_s)
         ids = np.asarray(res.ids)
         scores = np.asarray(res.scores)
         builds1 = getattr(st, "index_builds", 0)
@@ -452,11 +485,18 @@ class KNNScheduler:
 
         loop = asyncio.get_running_loop()
 
+        def _recover():
+            with self.tracer.span("recover"):
+                return self.config.recover()
+
         async def _run():
             t0 = time.monotonic()
             try:
-                await loop.run_in_executor(self._exec, self.config.recover)
-                self.metrics.on_recovery(time.monotonic() - t0)
+                await loop.run_in_executor(self._exec, _recover)
+                wall = time.monotonic() - t0
+                self.metrics.on_recovery(wall)
+                self.recorder.record("recovery_done",
+                                     wall_s=round(wall, 4))
                 self._seen_lost.clear()   # a later loss is a new event
             except Exception:  # noqa: BLE001 — a failed recovery leaves the
                 pass           # shard lost; the retry/fail path bounds callers
@@ -482,11 +522,17 @@ class KNNScheduler:
 
         loop = asyncio.get_running_loop()
 
+        def _resync():
+            with self.tracer.span("resync_replicas"):
+                return self.config.resync()
+
         async def _run():
             t0 = time.monotonic()
             try:
-                await loop.run_in_executor(self._exec, self.config.resync)
-                self.metrics.on_resync(time.monotonic() - t0)
+                await loop.run_in_executor(self._exec, _resync)
+                wall = time.monotonic() - t0
+                self.metrics.on_resync(wall)
+                self.recorder.record("resync_done", wall_s=round(wall, 4))
             except Exception:  # noqa: BLE001 — a failed resync leaves the
                 pass           # replica dead; the next batch re-kicks
             finally:
@@ -500,16 +546,27 @@ class KNNScheduler:
 
     async def _dispatch(self, reqs: List[_Pending], rows: int) -> None:
         loop = asyncio.get_running_loop()
+        # the batch span parents to the FIRST (oldest) request's span: a
+        # batch has many logical parents, the tree keeps the one whose
+        # window expiry flushed it; the rest link via their request spans
+        bspan = self.tracer.begin("batch", parent=reqs[0].span, rows=rows,
+                                  requests=len(reqs),
+                                  accuracy=reqs[0].accuracy or "default")
+        t_pad0 = time.monotonic()
+        queue_waits = [t_pad0 - r.t_submit for r in reqs]
         batch = self._assemble(reqs)
         accuracy = reqs[0].accuracy  # _start_batch packs one accuracy per batch
         t0 = time.monotonic()
+        pad_s = t0 - t_pad0
+        if self.profile is not None:
+            self.profile.on_batch_start()
         delays = iter(self.config.retry.delays())
         recovery_waits = 0
         while True:
             try:
                 (ids, scores, stats, builds, missing,
                  routing) = await loop.run_in_executor(
-                    self._exec, self._query_once, batch, accuracy)
+                    self._exec, self._query_once, batch, accuracy, bspan)
                 break
             except ShardLostError as e:
                 # allow_partial=False policy: queue this batch behind shard
@@ -517,6 +574,8 @@ class KNNScheduler:
                 # each wait either recovers the shard (progress) or falls
                 # through to the retry budget.
                 self.metrics.on_shard_lost()
+                self.recorder.fault("shard_lost", where="dispatch",
+                                    error=str(e))
                 rec = self._kick_recovery()
                 if rec is not None and recovery_waits < 2:
                     recovery_waits += 1
@@ -528,21 +587,30 @@ class KNNScheduler:
                 try:
                     delay = next(delays)
                 except StopIteration:
-                    self._fail_batch(reqs, e)
+                    self._fail_batch(reqs, e, bspan)
                     return
                 self.metrics.retries += 1
+                self.recorder.fault("retry", after="shard_lost",
+                                    delay_s=round(delay, 4))
                 await asyncio.sleep(delay)
             except Exception as e:  # noqa: BLE001 — timeout/device errors
                 if isinstance(e, TimeoutError):
                     self.metrics.timeouts += 1
+                    self.recorder.fault("batch_timeout",
+                                        timeout_s=self.config.batch_timeout_s)
                 try:
                     delay = next(delays)
                 except StopIteration:
-                    self._fail_batch(reqs, e)
+                    self._fail_batch(reqs, e, bspan)
                     return
                 self.metrics.retries += 1
+                self.recorder.fault("retry", after=type(e).__name__,
+                                    delay_s=round(delay, 4))
                 await asyncio.sleep(delay)
         wall = time.monotonic() - t0
+        if self.profile is not None:
+            self.profile.on_batch_end()
+        t_post0 = time.monotonic()
         self.metrics.on_batch(rows, wall, stats)
         self.metrics.query_index_builds += builds
         self.metrics.on_routing(routing["failovers"], routing["dispatches"])
@@ -554,6 +622,8 @@ class KNNScheduler:
             # degraded delivery: flag every request in the batch and start
             # rebuilding the lost shards behind the traffic
             self.metrics.on_degraded(len(reqs))
+            self.recorder.fault("degraded_serve", requests=len(reqs),
+                                missing_shards=sorted(missing))
             for shard in set(missing) - self._seen_lost:
                 self._seen_lost.add(shard)
                 self.metrics.on_shard_lost()
@@ -573,10 +643,19 @@ class KNNScheduler:
                 missed_deadline=(req.t_deadline is not None
                                  and now > req.t_deadline),
             )
+            self.tracer.end(req.span)
+        post_s = time.monotonic() - t_post0
+        self.metrics.on_phases(queue_waits, pad_s, wall, post_s)
+        self.tracer.end(bspan, wall_ms=round(wall * 1e3, 3))
 
-    def _fail_batch(self, reqs: List[_Pending], e: BaseException) -> None:
+    def _fail_batch(self, reqs: List[_Pending], e: BaseException,
+                    bspan=None) -> None:
         for req in reqs:
             if not req.future.done():
                 req.future.set_exception(
                     RuntimeError(f"batch dispatch failed: {e!r}"))
+            self.tracer.end(req.span, error=type(e).__name__)
         self.metrics.on_fail(len(reqs))
+        self.recorder.fault("batch_failed", requests=len(reqs),
+                            error=f"{type(e).__name__}: {e}")
+        self.tracer.end(bspan, error=type(e).__name__)

@@ -106,47 +106,100 @@ from repro.core.engine import (
     _pad_feature_axis,
     _shape_stats,
     load_calibration,
+    observe_thresholds,
     plan,
     prepare_r_block_inputs,
 )
 from repro.core.iib import iib_scan_join
 from repro.core.iiib import iiib_scan_join
 from repro.core.topk import TopKState, init_topk, tree_reduce_topk
+from repro.obs import recorder as obs_recorder
+from repro.obs import trace as obs_trace
 from repro.runtime.fault import ReplicaHealth, ReplicaLostError, ShardLostError
 from repro.sparse.format import SparseBatch
 
 P = jax.sharding.PartitionSpec
 
 
-@dataclasses.dataclass
 class StoreStats:
     """Store-lifetime work accounting (per-query numbers live in the
-    JoinStats each ``query()`` returns)."""
+    JoinStats each ``query()`` returns).
 
-    queries: int = 0
-    device_dispatches: int = 0   # jitted fan-out launches (one per R block)
-    host_syncs: int = 0          # result pulls (one per R block)
-    index_builds: int = 0        # per-shard S-block index constructions
-    stack_uploads: int = 0       # placement events (full OR incremental)
-    placed_shards: int = 0       # per-(replica, shard) slices shipped
-    placed_bytes: int = 0        # bytes shipped host→device by placements
-    build_wall_s: float = 0.0
-    query_wall_s: float = 0.0
-    deleted: int = 0             # rows tombstoned via delete()
-    expired: int = 0             # rows tombstoned via TTL expiry
-    compactions: int = 0         # shard compactions (real rebuilds)
-    saves: int = 0               # checkpoint commits (save / save_dirty)
-    save_wall_s: float = 0.0
-    shard_losses: int = 0        # shard copies marked lost by failures
-    degraded_queries: int = 0    # queries served with shards missing
-    recoveries: int = 0          # shards rebuilt from a checkpoint slice
-    recovery_wall_s: float = 0.0
-    replica_losses: int = 0      # replicas marked dead (health transitions)
-    replica_failovers: int = 0   # blocks served by a non-first-choice replica
-    resyncs: int = 0             # replica anti-entropy re-placements
-    resync_wall_s: float = 0.0
-    replica_dispatches: Dict[int, int] = dataclasses.field(
-        default_factory=dict)  # fan-out attempts routed to each replica
+    Since PR 10 every counter attribute is backed by a typed instrument in
+    ``self.registry`` (repro.obs.registry) — the attribute API
+    (``stats.queries += 1``, ``stats.saves``) is unchanged, but the same
+    cells now feed the OpenMetrics text exposition (``stats.expose()``)
+    next to the serving metrics, so the two views cannot drift."""
+
+    # attribute → (instrument name, help)
+    _COUNTERS = {
+        "queries": ("store_queries", "query() calls"),
+        "device_dispatches": ("store_device_dispatches",
+                              "jitted fan-out launches (one per R block)"),
+        "host_syncs": ("store_host_syncs", "result pulls (one per R block)"),
+        "index_builds": ("store_index_builds",
+                         "per-shard S-block index constructions"),
+        "stack_uploads": ("store_stack_uploads",
+                          "placement events (full OR incremental)"),
+        "placed_shards": ("store_placed_shards",
+                          "per-(replica, shard) slices shipped"),
+        "placed_bytes": ("store_placed_bytes",
+                         "bytes shipped host->device by placements"),
+        "build_wall_s": ("store_build_wall_seconds",
+                         "time inside build()/extend()"),
+        "query_wall_s": ("store_query_wall_seconds", "time inside query()"),
+        "deleted": ("store_rows_deleted", "rows tombstoned via delete()"),
+        "expired": ("store_rows_expired", "rows tombstoned via TTL expiry"),
+        "compactions": ("store_compactions",
+                        "shard compactions (real rebuilds)"),
+        "saves": ("store_saves", "checkpoint commits (save / save_dirty)"),
+        "save_wall_s": ("store_save_wall_seconds", "time inside save()"),
+        "shard_losses": ("store_shard_losses",
+                         "shard copies marked lost by failures"),
+        "degraded_queries": ("store_degraded_queries",
+                             "queries served with shards missing"),
+        "recoveries": ("store_recoveries",
+                       "shards rebuilt from a checkpoint slice"),
+        "recovery_wall_s": ("store_recovery_wall_seconds",
+                            "time inside recover()"),
+        "replica_losses": ("store_replica_losses",
+                           "replicas marked dead (health transitions)"),
+        "replica_failovers": ("store_replica_failovers",
+                              "blocks served by a non-first-choice replica"),
+        "resyncs": ("store_resyncs", "replica anti-entropy re-placements"),
+        "resync_wall_s": ("store_resync_wall_seconds",
+                          "time inside resync_replicas()"),
+    }
+
+    def __init__(self, registry=None):
+        from repro.obs.registry import MetricRegistry
+
+        object.__setattr__(self, "_inst", {})
+        reg = registry or MetricRegistry()
+        self.registry = reg
+        for attr, (name, hlp) in self._COUNTERS.items():
+            self._inst[attr] = reg.counter(name, hlp)
+        # fan-out attempts routed to each replica (plain dict: labelled
+        # per-replica counters stay host-side scratch)
+        self.replica_dispatches: Dict[int, int] = {}
+
+    def __getattr__(self, name):
+        inst = object.__getattribute__(self, "__dict__").get("_inst", {}).get(name)
+        if inst is not None:
+            return inst.value
+        raise AttributeError(
+            f"{type(self).__name__!s} has no attribute {name!r}")
+
+    def __setattr__(self, name, value):
+        inst = self.__dict__.get("_inst", {}).get(name)
+        if inst is not None:
+            inst.set(value)
+        else:
+            object.__setattr__(self, name, value)
+
+    def expose(self) -> str:
+        """OpenMetrics-style text exposition of the store counters."""
+        return self.registry.expose()
 
 
 def _np_sparse_slice(idx, val, nnz, lo: int, hi: int, dim: int) -> SparseBatch:
@@ -798,6 +851,70 @@ class ShardedKNNStore:
         self._query_fns[key] = jax.jit(fn)
         return self._query_fns[key]
 
+    def _fanout_args(self, br, prep, r_valid, st, approx: bool,
+                     rk=None, rr=None) -> tuple:
+        """Assemble the positional args of ONE fan-out call in the exact
+        order ``_query_fn``'s program expects them: R-side block inputs,
+        then (approx) the replicated band keys/valids, then the replica's
+        sharded stacks, then (approx) the shard LSH keys.  One definition
+        serves ``query()``'s dispatch loop AND ``lowered_fanout`` — the
+        orderings cannot drift apart."""
+        if self.algorithm == "bf":
+            args = (br.indices, br.values, br.nnz)
+        elif self.algorithm == "iib":
+            args = (prep["r_tiles"], prep["tiles"])
+        else:  # iiib
+            args = (prep["r_tiles"], prep["mwt"], prep["tiles"],
+                    jnp.asarray(r_valid))
+        if approx:
+            args += (rk, rr)
+        if self.algorithm == "bf":
+            args += (st["idx"], st["val"], st["nnz"], st["ids"], st["valid"])
+        elif self.algorithm == "iib":
+            args += (st["rows"], st["vals"], st["counts"],
+                     st["ids"], st["valid"])
+        else:
+            args += (st["rows"], st["vals"], st["counts"], st["mass"],
+                     st["ids"], st["valid"])
+        if approx:
+            args += (st["lshk"],)
+        return args
+
+    def lowered_fanout(self, R: SparseBatch, accuracy: Optional[str] = None):
+        """Lower (without running) replica 0's jitted fan-out program at
+        ``R``'s resolved block shape — the hook ``obs.fanout_report`` uses
+        for the predicted-vs-measured FLOPs/bytes roofline
+        (``lowered.compile().as_text()`` feeds ``launch/hlo_analysis``)."""
+        acc = accuracy if accuracy is not None else self.spec.accuracy
+        approx = acc == "approx"
+        if approx and self._lsh is None:
+            raise ValueError("store has no LSH band tier; cannot lower the "
+                             "approx fan-out")
+        n_r = R.num_vectors
+        rb = min(self.spec.r_block or self.plan_for(R).r_block, n_r)
+        br, r_valid = _pad_block(R, 0, rb)
+        prep = None
+        if self.algorithm == "iib":
+            prep = prepare_r_block_inputs(br, "iib", self.tile)
+        elif self.algorithm == "iiib":
+            prep = prepare_r_block_inputs(
+                br, "iiib", self.tile,
+                rank_np=self._rank_np, rank_dev=self._rank_dev,
+            )
+        rk = rr = None
+        if approx:
+            stop = min(rb, n_r)
+            rk_np = np.zeros((rb, self._lsh.cfg.n_bands), np.int32)
+            rk_np[:stop] = self._lsh.keys_host(
+                np.asarray(R.indices[:stop]), np.asarray(R.values[:stop]))
+            rr_np = r_valid.copy()
+            rr_np[:stop] &= np.asarray(R.nnz[:stop]) > 0
+            rk, rr = jnp.asarray(rk_np), jnp.asarray(rr_np)
+        fn = self._query_fn(rb, 0, approx)
+        args = self._fanout_args(br, prep, r_valid, self._stacks[0],
+                                 approx, rk, rr)
+        return fn.lower(*args)
+
     def _occupied_tiles_of(self, idx: np.ndarray) -> int:
         """Dim-tiles the given rows touch (the engine's planner statistic)."""
         ok = idx < self.dim
@@ -864,9 +981,13 @@ class ShardedKNNStore:
             self._lost[r].add(shard)
             self._replica_dirty[r].add(shard)
             self.stats.shard_losses += 1
+            obs_recorder.get_recorder().fault(
+                "shard_copy_lost", replica=r, shard=shard)
         if self.health.record_failure(r):
             self.stats.replica_losses += 1
             self._replica_dirty[r] = set(range(self.n_shards))
+            obs_recorder.get_recorder().fault(
+                "replica_lost", replica=r, via="failure_threshold")
         else:
             self._refresh_replica_valid(r)
 
@@ -875,6 +996,8 @@ class ShardedKNNStore:
         threshold, stop routing to r, and mark every shard copy dirty."""
         if self.health.mark_dead(r):
             self.stats.replica_losses += 1
+            obs_recorder.get_recorder().fault(
+                "replica_lost", replica=r, via="ReplicaLostError")
         self._replica_dirty[r] = set(range(self.n_shards))
 
     def query(
@@ -933,7 +1056,12 @@ class ShardedKNNStore:
         out_scores, out_ids = [], []
         served_missing: Set[int] = set()
         for r0 in range(0, n_r, rb):
+            # leaf span per dispatched R block; parents to the serving
+            # batch/dispatch span when one is active on this thread
+            _sp = obs_trace.start_span("store.r_block", r0=r0,
+                                       algorithm=self.algorithm)
             br, r_valid = _pad_block(R, r0, rb)
+            prep = None
             if self.algorithm == "iib":
                 prep = prepare_r_block_inputs(br, "iib", self.tile)
             elif self.algorithm == "iiib":
@@ -942,6 +1070,7 @@ class ShardedKNNStore:
                     rank_np=self._rank_np, rank_dev=self._rank_dev,
                 )
             cand_cnt = None
+            rk = rr = None
             if approx:
                 # R band keys are host-hashed from the raw R slice (same
                 # projection every shard/replica uses — identical keys to
@@ -982,6 +1111,10 @@ class ShardedKNNStore:
                         raise ShardLostError(0, "all replicas dead") from last_err
                 r = order[0]
                 attempts += 1
+                probing = r in self.health.half_open()
+                if probing:
+                    obs_recorder.get_recorder().record(
+                        "half_open_probe", replica=r, r0=r0)
                 self.stats.replica_dispatches[r] = (
                     self.stats.replica_dispatches.get(r, 0) + 1)
                 st = self._stacks[r]
@@ -989,49 +1122,23 @@ class ShardedKNNStore:
                 try:
                     if self.fault_plan is not None:
                         self.fault_plan.on_dispatch(replica=r)
-                    if self.algorithm == "bf":
+                    out = fn(*self._fanout_args(br, prep, r_valid, st,
+                                                approx, rk, rr))
+                    if self.algorithm == "iiib":
                         if approx:
-                            state, cand_cnt = fn(
-                                br.indices, br.values, br.nnz, rk, rr,
-                                st["idx"], st["val"], st["nnz"],
-                                st["ids"], st["valid"], st["lshk"],
-                            )
+                            state, kept, thr, cand_cnt = out
                         else:
-                            state = fn(
-                                br.indices, br.values, br.nnz,
-                                st["idx"], st["val"], st["nnz"],
-                                st["ids"], st["valid"],
-                            )
-                    elif self.algorithm == "iib":
-                        if approx:
-                            state, cand_cnt = fn(
-                                prep["r_tiles"], prep["tiles"], rk, rr,
-                                st["rows"], st["vals"], st["counts"],
-                                st["ids"], st["valid"], st["lshk"],
-                            )
-                        else:
-                            state = fn(
-                                prep["r_tiles"], prep["tiles"],
-                                st["rows"], st["vals"], st["counts"],
-                                st["ids"], st["valid"],
-                            )
+                            state, kept, thr = out
                     elif approx:
-                        state, kept, thr, cand_cnt = fn(
-                            prep["r_tiles"], prep["mwt"], prep["tiles"],
-                            jnp.asarray(r_valid), rk, rr,
-                            st["rows"], st["vals"], st["counts"], st["mass"],
-                            st["ids"], st["valid"], st["lshk"],
-                        )
+                        state, cand_cnt = out
                     else:
-                        state, kept, thr = fn(
-                            prep["r_tiles"], prep["mwt"], prep["tiles"],
-                            jnp.asarray(r_valid),
-                            st["rows"], st["vals"], st["counts"], st["mass"],
-                            st["ids"], st["valid"],
-                        )
+                        state = out
                     self.health.record_success(r)
                     if tried:
                         self.stats.replica_failovers += 1
+                        obs_recorder.get_recorder().fault(
+                            "replica_failover", replica=r, r0=r0,
+                            tried=sorted(tried))
                     served_missing |= self._lost[r]
                     break
                 except ShardLostError as e:
@@ -1051,7 +1158,9 @@ class ShardedKNNStore:
                     tried.add(r)
             if self.algorithm == "iiib":
                 stats.list_entries += int(np.asarray(kept).sum())
-                stats.min_prune_trace.append(np.asarray(thr))
+                thr_np = np.asarray(thr)
+                stats.min_prune_trace.append(thr_np)
+                observe_thresholds(thr_np)
             if cand_cnt is not None:
                 # the counts ride the SAME program (all_gather outputs) —
                 # no extra dispatch, pulled with the block's result
@@ -1075,6 +1184,7 @@ class ShardedKNNStore:
             out_scores.append(np.asarray(state.scores)[r_valid])
             out_ids.append(np.asarray(state.ids)[r_valid])
             stats.host_syncs += 1                # the R block's result pull
+            obs_trace.end_span(_sp, attempts=attempts)
         dt = time.perf_counter() - t_q
         stats.query_wall_s += dt
         self.stats.query_wall_s += dt
@@ -1296,29 +1406,30 @@ class ShardedKNNStore:
         from repro.checkpoint import ckpt as _ckpt
 
         t0 = time.perf_counter()
-        ls = _ckpt.latest_step(directory)
-        step = 0 if ls is None else ls + 1
-        link_from = link_paths = None
-        if dirty_only and self._last_save_dir is not None:
-            clean = [i for i in range(self.n_shards) if i not in self._dirty]
-            link_paths = set()
-            for i in clean:
-                key = self._shard_key(i)
-                for leaf in ("idx", "val", "nnz", "alive", "deadline", "gids"):
-                    link_paths.add(f"['{key}']['{leaf}']")
-            if self._rank_np is not None and not self._dirty_rank:
-                link_paths.add("['rank']")
-            link_from = self._last_save_dir
-        path = _ckpt.save(
-            directory, step, self._ckpt_tree(),
-            extra={"store": self._meta(), **(extra or {})},
-            link_from=link_from, link_paths=link_paths,
-        )
-        self._dirty.clear()
-        self._dirty_rank = False
-        self._last_save_dir = path
-        self.stats.saves += 1
-        self.stats.save_wall_s += time.perf_counter() - t0
+        with obs_trace.span("ckpt.save", dirty_only=dirty_only):
+            ls = _ckpt.latest_step(directory)
+            step = 0 if ls is None else ls + 1
+            link_from = link_paths = None
+            if dirty_only and self._last_save_dir is not None:
+                clean = [i for i in range(self.n_shards) if i not in self._dirty]
+                link_paths = set()
+                for i in clean:
+                    key = self._shard_key(i)
+                    for leaf in ("idx", "val", "nnz", "alive", "deadline", "gids"):
+                        link_paths.add(f"['{key}']['{leaf}']")
+                if self._rank_np is not None and not self._dirty_rank:
+                    link_paths.add("['rank']")
+                link_from = self._last_save_dir
+            path = _ckpt.save(
+                directory, step, self._ckpt_tree(),
+                extra={"store": self._meta(), **(extra or {})},
+                link_from=link_from, link_paths=link_paths,
+            )
+            self._dirty.clear()
+            self._dirty_rank = False
+            self._last_save_dir = path
+            self.stats.saves += 1
+            self.stats.save_wall_s += time.perf_counter() - t0
         return path
 
     def save_dirty(self, directory: str, extra: Optional[dict] = None) -> str:
@@ -1356,6 +1467,7 @@ class ShardedKNNStore:
             step = _ckpt.latest_step(directory)
             if step is None:
                 raise FileNotFoundError(f"no valid checkpoint in {directory}")
+        _sp = obs_trace.start_span("ckpt.load", step=step)
         arrays, extra = _ckpt.load_arrays(directory, step)
         meta = extra["store"]
         n_saved = int(meta["n_shards"])
@@ -1414,6 +1526,7 @@ class ShardedKNNStore:
             store._dirty_rank = False
             store._last_save_dir = os.path.join(directory, f"step_{step:08d}")
         store.loaded_extra = {k: v for k, v in extra.items() if k != "store"}
+        obs_trace.end_span(_sp, n_shards=store.n_shards)
         return store
 
     # -- shard loss + recovery -----------------------------------------------
@@ -1469,6 +1582,9 @@ class ShardedKNNStore:
                 newly = True
         if newly:
             self.stats.shard_losses += 1
+            obs_recorder.get_recorder().fault(
+                "shard_lost", shard=i,
+                replica="all" if replica is None else replica)
             for r in targets:
                 if self.health.state(r) != ReplicaHealth.DEAD:
                     self._refresh_replica_valid(r)
@@ -1494,6 +1610,7 @@ class ShardedKNNStore:
         if not glost:
             return ()
         t0 = time.perf_counter()
+        _sp = obs_trace.start_span("recover", shards=sorted(glost))
         if step is None:
             step = _ckpt.latest_step(directory)
             if step is None:
@@ -1538,6 +1655,10 @@ class ShardedKNNStore:
         self._upload_stacks()
         self.stats.recoveries += len(recovered)
         self.stats.recovery_wall_s += time.perf_counter() - t0
+        obs_trace.end_span(_sp, recovered=len(recovered))
+        obs_recorder.get_recorder().record(
+            "shard_recovered", shards=recovered,
+            wall_s=round(time.perf_counter() - t0, 4))
         return tuple(recovered)
 
     # -- replica resync (DESIGN.md §10) --------------------------------------
@@ -1558,6 +1679,7 @@ class ShardedKNNStore:
         if self.n_replicas == 1:
             return ()
         t0 = time.perf_counter()
+        _sp = obs_trace.start_span("resync_replicas")
         resynced = []
         for r in range(self.n_replicas):
             was_dead = self.health.state(r) == ReplicaHealth.DEAD
@@ -1583,6 +1705,10 @@ class ShardedKNNStore:
             self.stats.resyncs += 1
         if resynced:
             self.stats.resync_wall_s += time.perf_counter() - t0
+            obs_recorder.get_recorder().record(
+                "replicas_resynced", replicas=resynced,
+                wall_s=round(time.perf_counter() - t0, 4))
+        obs_trace.end_span(_sp, resynced=len(resynced))
         return tuple(resynced)
 
     def verify_replicas(self) -> bool:
